@@ -1,0 +1,93 @@
+"""Benchmark utilities: wall-clock timing of jitted callables + the
+schedule->executable mapping shared by the paper-table benchmarks.
+
+Timing is XLA-CPU wall clock (this container's only real backend). The
+schedule space (nnz-split vs row-split, group size G, strategies, tiling)
+is expressed in the compiled program structure, so relative effects track
+the paper's axes; absolute numbers are CPU-specific (DESIGN.md changed
+assumption 5).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GroupReduceStrategy, segment_group_reduce
+from repro.kernels import ref
+from repro.sparse import ELL, GroupedCOO
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 7) -> float:
+    """Median seconds/call of a jitted fn (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+# ------------------------------------------------------------------------
+# Schedule executor: pure-JAX analogue of each kernel schedule, jitted so
+# XLA compiles a genuinely different program per schedule point.
+# ------------------------------------------------------------------------
+
+
+def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
+                   nnz_tile: int = 256):
+    g = GroupedCOO.fromcsr(csr, max(nnz_tile, group_size))
+    n_rows = csr.shape[0]
+    strat = GroupReduceStrategy(strategy)
+
+    def run(rows, cols, vals, b):
+        partial = vals[:, None].astype(jnp.float32) * jnp.take(
+            b.astype(jnp.float32), cols, axis=0)
+        if strat == GroupReduceStrategy.ACCUMULATE:
+            return jax.ops.segment_sum(partial, rows, num_segments=n_rows)
+        return segment_group_reduce(partial, rows, n_rows,
+                                    group_size=group_size, strategy=strat)
+
+    fn = jax.jit(run)
+    args = (g.rows, g.cols, g.vals,
+            jax.random.normal(jax.random.PRNGKey(0), (csr.shape[1], n_dense)))
+    return fn, args
+
+
+def make_rb_runner(csr, n_dense, *, row_tile: int = 8,
+                   width: int | None = None):
+    ell = ELL.fromcsr(csr, width=width, row_tile=row_tile)
+    n_rows = csr.shape[0]
+
+    def run(ecols, evals, b):
+        return ref.spmm_ell_ref(ecols, evals, b, n_rows)
+
+    fn = jax.jit(run)
+    args = (ell.cols, ell.vals,
+            jax.random.normal(jax.random.PRNGKey(0), (csr.shape[1], n_dense)))
+    return fn, args
+
+
+def geomean(xs) -> float:
+    xs = np.asarray(list(xs), np.float64)
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def suite(sizes=((4096, 4096),), densities=(0.001, 0.01),
+          skews=(0.0, 1.0, 2.0), seed: int = 0):
+    """The synthetic matrix suite (stands in for the paper's SuiteSparse
+    selection — DESIGN.md changed assumption 5)."""
+    from repro.sparse import random_csr
+
+    mats = []
+    for (m, n) in sizes:
+        for d in densities:
+            for s in skews:
+                mats.append(((m, n, d, s),
+                             random_csr(m, n, density=d, skew=s,
+                                        seed=seed + int(s * 10))))
+    return mats

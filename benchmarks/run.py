@@ -1,0 +1,48 @@
+"""Benchmark harness — one function per paper table (Sgap Tables 1-5) plus
+beyond-paper benches. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger matrices (slower, closer to paper scale)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,table4,table5,"
+                         "moe,selector")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import beyond, tables
+
+    benches = {
+        "table1": lambda: tables.table1_group_size(quick),
+        "table2": lambda: tables.table2_segment_vs_atomic(quick),
+        "table3": lambda: tables.table3_new_vs_original(quick),
+        "table4": lambda: tables.table4_tuning(quick),
+        "table5": lambda: tables.table5_dynamic_choice(quick),
+        "moe": lambda: beyond.moe_dispatch(quick),
+        "selector": lambda: beyond.selector_quality(quick),
+    }
+    wanted = args.only.split(",") if args.only else list(benches)
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name in wanted:
+        try:
+            for row in benches[name]():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            ok = False
+            print(f"{name},NaN,ERROR:{e!r}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""2-layer GCN on a synthetic graph with the Sgap SpMM at its core —
+the paper's own motivating workload family (GNN aggregation).
+
+Aggregation Ã·X runs through the segment-group SpMM (auto-selected
+schedule); training uses plain jax.grad through the ref path (the Pallas
+kernel is validated against it elsewhere).
+
+    PYTHONPATH=src python examples/gcn_spmm.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import select_schedule
+from repro.kernels import ref
+from repro.sparse import CSR, random_csr
+from repro.sparse.ops import spmm
+from repro.sparse.random import matrix_stats
+
+N_NODES, N_FEAT, N_CLASS = 256, 32, 4
+
+# synthetic graph: random adjacency + self loops, symmetric-normalized
+adj = random_csr(N_NODES, N_NODES, density=0.02, seed=0)
+dense = np.asarray(adj.todense())
+dense = ((dense + dense.T) > 0).astype(np.float32)
+np.fill_diagonal(dense, 1.0)
+deg = dense.sum(1)
+norm = dense / np.sqrt(np.outer(deg, deg))
+A = CSR.fromdense(norm)
+coo = A.tocoo()
+
+sched = select_schedule(matrix_stats(A), N_FEAT)
+print(f"selected aggregation schedule: {sched}")
+
+rng = np.random.default_rng(0)
+feats = jnp.asarray(rng.standard_normal((N_NODES, N_FEAT)), jnp.float32)
+# learnable task: labels from a random teacher GCN (graph-correlated)
+w_teacher = jnp.asarray(rng.standard_normal((N_FEAT, N_CLASS)), jnp.float32)
+labels = jnp.argmax(jnp.asarray(norm, jnp.float32) @ feats @ w_teacher,
+                    axis=-1)
+params = {
+    "w1": jnp.asarray(rng.standard_normal((N_FEAT, 64)) * 0.1, jnp.float32),
+    "w2": jnp.asarray(rng.standard_normal((64, N_CLASS)) * 0.1, jnp.float32),
+}
+
+
+def gcn_fwd(params, x):
+    # layer 1: Ã X W1  (aggregation = the paper's SpMM)
+    h = ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, x @ params["w1"],
+                         N_NODES)
+    h = jax.nn.relu(h)
+    h = ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, h @ params["w2"],
+                         N_NODES)
+    return h
+
+
+def loss_fn(params, x, y):
+    logits = gcn_fwd(params, x)
+    return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(N_NODES), y])
+
+
+# sanity: the Pallas segment-group kernel agrees with the training path
+h0 = feats @ params["w1"]
+np.testing.assert_allclose(
+    np.asarray(spmm(A, h0, sched)),
+    np.asarray(ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, h0, N_NODES)),
+    rtol=1e-4, atol=1e-4)
+print("pallas aggregation matches training path ✓")
+
+step = jax.jit(jax.value_and_grad(loss_fn))
+lr = 0.5
+losses = []
+for i in range(40):
+    loss, grads = step(params, feats, labels)
+    params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    losses.append(float(loss))
+print(f"GCN loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+assert losses[-1] < losses[0] - 0.1
+print("gcn_spmm complete ✓")

@@ -1,0 +1,42 @@
+"""Quickstart: the Sgap segment-group SpMM in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import jax
+
+from repro.core import KernelSchedule, select_schedule
+from repro.sparse import random_csr
+from repro.sparse.ops import spmm
+from repro.sparse.random import matrix_stats
+
+# A skewed sparse matrix (a few very long rows) — the regime where the
+# paper's flexible reduction wins.
+A = random_csr(512, 512, density=0.02, skew=1.5, seed=0)
+B = jax.random.normal(jax.random.PRNGKey(0), (512, 8))
+
+# 1. Let the data-aware selector pick a schedule (paper Table 5 made a
+#    library default).
+stats = matrix_stats(A)
+sched = select_schedule(stats, n_dense_cols=B.shape[1])
+print(f"matrix: {stats['nnz']} nnz, row CV {stats['row_cv']:.2f}")
+print(f"selected schedule: {sched}")
+
+# 2. Run the Pallas segment-group kernel (interpret mode on CPU) and check
+#    against the pure-jnp oracle.
+out = spmm(A, B, sched)
+ref = spmm(A, B, impl="ref")
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                           atol=1e-4)
+print("kernel matches oracle ✓")
+
+# 3. Try explicit atomic-parallelism points {<1 nnz, c col>, r}.
+for r in (8, 32):
+    s = KernelSchedule("eb", nnz_tile=256, col_tile=8, group_size=r,
+                       strategy="segment")
+    out_r = spmm(A, B, s)
+    np.testing.assert_allclose(np.asarray(out_r), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    print(f"group size r={r}: OK")
+print("done")

@@ -1,0 +1,4 @@
+"""repro: Sgap (segment group + atomic parallelism) as a production JAX/
+Pallas framework — sparse kernels, model zoo, multi-pod distribution."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,19 @@
+"""Sgap core: atomic parallelism (design space) + segment group (schedule
+abstraction + executable reduction spec)."""
+from .atomic_parallelism import (  # noqa: F401
+    DA_SPMM_POINTS,
+    AtomicParallelism,
+    KernelSchedule,
+    enumerate_space,
+    is_legal,
+    to_schedule,
+)
+from .segment_group import (  # noqa: F401
+    GroupReduceStrategy,
+    SegmentGroup,
+    group_waste_fraction,
+    group_writeback_counts,
+    segment_group_reduce,
+    segment_sum_ref,
+)
+from .selector import candidate_schedules, predict_cost, select_schedule  # noqa: F401

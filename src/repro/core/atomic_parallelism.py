@@ -1,0 +1,180 @@
+"""Atomic parallelism — the paper's design-space model (Sgap §3).
+
+An SpMM algorithm point is ``{<x sparse-work, c col>, r}``:
+
+* ``split``      what the sparse-work unit is: ``nnz`` or ``row``;
+* ``x``          minimal sparse data per thread: ``g`` units, ``1`` unit, or
+                 ``1/g`` of a unit (g threads collaborate on one unit);
+* ``c``          minimal dense columns per thread (coarsen factor);
+* ``r``          reduction parallelism — how many threads synchronize per
+                 reduction step (the paper's group size).
+
+Legality rules (paper §3.3, Fig. 8):
+
+1. ``<1/g nnz, ...>`` and ``<..., 1/c col>`` with nnz split are illegal: a
+   non-zero must be multiplied by at least one whole dense element.
+2. ``{<1/g row, x col>, r}`` with ``r < g`` is illegal: parallel reduction
+   has a single writeback thread, so the sync width must cover the row
+   group.
+3. ``<1/g row, 1/c col>`` is illegal: resource parallelism may multiply
+   only one element of the atomic parallelism.
+
+The mapping to TPU kernel schedules is in :func:`to_schedule` — see
+DESIGN.md §2/§3 for the semantics of each field on TPU.
+
+DA-SpMM's space embeds as:
+    EB+PR = {<1 nnz, c col>, 32}     EB+SR = {<32 nnz, c col>, 1}
+    RB+PR = {<1/32 row, c col>, 32}  RB+SR = {<1 row, c col>, 1}
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from fractions import Fraction
+from typing import Iterable, List
+
+__all__ = [
+    "AtomicParallelism",
+    "KernelSchedule",
+    "is_legal",
+    "enumerate_space",
+    "to_schedule",
+    "DA_SPMM_POINTS",
+]
+
+REDUCTION_PARALLELISMS = (1, 2, 4, 8, 16, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AtomicParallelism:
+    """One point ``{<x split, c col>, r}`` in the design space."""
+
+    split: str  # 'nnz' | 'row'
+    x: Fraction  # minimal sparse data: Fraction(g), Fraction(1), Fraction(1, g)
+    c: int  # dense columns per thread (>= 1)
+    r: int  # reduction parallelism
+
+    def __post_init__(self):
+        if self.split not in ("nnz", "row"):
+            raise ValueError(f"split must be 'nnz' or 'row', got {self.split}")
+        object.__setattr__(self, "x", Fraction(self.x))
+        if self.c < 1:
+            raise ValueError("fractional dense columns are expressed via "
+                             "split='row' collaboration, not c < 1")
+
+    def __str__(self):
+        return f"{{<{self.x} {self.split}, {self.c} col>, {self.r}}}"
+
+
+def is_legal(p: AtomicParallelism) -> bool:
+    # Rule 1: no fractional nnz.
+    if p.split == "nnz" and p.x < 1:
+        return False
+    # Rule 2: row collaboration (1/g row) forces parallel reduction whose
+    # sync width must cover the g collaborators.
+    if p.split == "row" and p.x < 1 and p.r < 1 / p.x:
+        return False
+    # Rule 3 is structurally unrepresentable here (c >= 1 enforced), kept
+    # for documentation parity with the paper.
+    if p.r not in REDUCTION_PARALLELISMS:
+        return False
+    return True
+
+
+def enumerate_space(
+    g_values: Iterable[int] = (1, 2, 4, 8, 16, 32),
+    c_values: Iterable[int] = (1, 2, 4, 8),
+    r_values: Iterable[int] = REDUCTION_PARALLELISMS,
+) -> List[AtomicParallelism]:
+    """All legal points over the given tunable ranges (deduplicated)."""
+    xs = set()
+    for g in g_values:
+        xs.add(Fraction(g))
+        xs.add(Fraction(1, g))
+    points = set()
+    for split, x, c, r in itertools.product(("nnz", "row"), xs, c_values, r_values):
+        p = AtomicParallelism(split, x, c, r)
+        if is_legal(p):
+            points.add(p)
+    return sorted(points, key=lambda p: (p.split, p.x, p.c, p.r))
+
+
+# The four DA-SpMM algorithms (paper §3.3), row-major variants.
+DA_SPMM_POINTS = {
+    "EB+PR": AtomicParallelism("nnz", Fraction(1), 4, 32),
+    "EB+SR": AtomicParallelism("nnz", Fraction(32), 4, 1),
+    "RB+PR": AtomicParallelism("row", Fraction(1, 32), 4, 32),
+    "RB+SR": AtomicParallelism("row", Fraction(1), 4, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSchedule:
+    """TPU-side realization of an atomic-parallelism point.
+
+    kernel      'eb' (nnz-split, segment strategy) or 'rb' (row-split,
+                parallel strategy).
+    nnz_tile    nnz per grid cell ('eb').
+    row_tile    rows per grid cell ('rb').
+    col_tile    dense columns per grid cell (coarsen × lane width).
+    group_size  segment-group width G — sub-tile one-hot reduce width
+                ('eb'); vestigial for 'rb' (single writeback per row).
+    strategy    'segment' | 'parallel' | 'accumulate'.
+    """
+
+    kernel: str
+    nnz_tile: int = 256
+    row_tile: int = 8
+    col_tile: int = 128
+    group_size: int = 32
+    strategy: str = "segment"
+
+    def __post_init__(self):
+        if self.kernel not in ("eb", "rb"):
+            raise ValueError(self.kernel)
+        if self.strategy not in ("segment", "parallel", "accumulate"):
+            raise ValueError(self.strategy)
+        if self.kernel == "eb" and self.nnz_tile % self.group_size != 0:
+            raise ValueError("nnz_tile must be a multiple of group_size")
+
+
+def to_schedule(
+    p: AtomicParallelism,
+    *,
+    lane_width: int = 128,
+    base_nnz_tile: int = 256,
+    base_row_tile: int = 8,
+) -> KernelSchedule:
+    """Map a design-space point to a concrete TPU kernel schedule.
+
+    GPU threads disappear on TPU; what survives is (a) how much sparse work
+    a grid cell owns, (b) the reduction granularity G inside the cell, and
+    (c) the dense-column tile. ``x = g nnz`` scales the nnz tile; ``x = 1/g
+    row`` means g-wide collaboration on a row, which on TPU is simply the
+    row-split kernel (whole rows per cell, MXU does the intra-row
+    reduction). ``r`` becomes the segment-group width for nnz-split.
+    """
+    col_tile = max(lane_width, p.c * lane_width // 4)
+    if p.split == "nnz":
+        g = int(p.x) if p.x >= 1 else 1
+        nnz_tile = base_nnz_tile * max(1, g // 8)
+        group = p.r if p.r > 1 else min(32, nnz_tile)
+        strategy = "segment" if p.r > 1 else "accumulate"
+        # group must divide nnz_tile
+        while nnz_tile % group:
+            group //= 2
+        return KernelSchedule(
+            kernel="eb", nnz_tile=nnz_tile, col_tile=col_tile,
+            group_size=max(group, 1), strategy=strategy,
+        )
+    else:
+        if p.x >= 1:
+            row_tile = base_row_tile * int(p.x)
+        else:
+            # 1/g row: g-wide collaboration -> narrower row tile, wider
+            # reduce; on TPU both land in the same row-split kernel.
+            row_tile = base_row_tile
+        return KernelSchedule(
+            kernel="rb", row_tile=row_tile, col_tile=col_tile,
+            group_size=p.r, strategy="parallel",
+        )

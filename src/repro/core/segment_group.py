@@ -1,0 +1,155 @@
+"""Segment group — the paper's new compiler abstraction (Sgap §4/§5).
+
+A *segment group* separates the two roles the GPU warp used to conflate:
+
+* tiling semantics   -> on TPU: the Pallas grid / BlockSpec decomposition;
+* synchronization    -> on TPU: the width-G one-hot reduce inside a tile
+  semantics             plus the writeback strategy.
+
+``GroupReduceStrategy``:
+
+SEGMENT     multiple writeback lanes per group, decided at runtime by the
+            segment ids (the paper's segment reduction). TPU realization:
+            one-hot matmul ``Sᵀ·P`` over each G-wide group, then carry
+            accumulation across group boundaries.
+PARALLEL    exactly one writeback lane per group; all lanes share one
+            segment (the paper's parallel reduction). TPU realization: a
+            plain within-group sum (MXU row reduce).
+ACCUMULATE  no intra-group combine; every lane writes back with ``+=``
+            (the paper's atomicAdd). TPU realization: scatter-add — legal
+            because the TPU grid is sequential; across cores it becomes a
+            psum. Used as the correctness fallback.
+
+This module is the *pure-JAX executable specification* of the semantics;
+``repro.kernels.segment_reduce`` / ``spmm_eb`` are the Pallas realizations
+and are tested against this spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "GroupReduceStrategy",
+    "SegmentGroup",
+    "segment_group_reduce",
+    "segment_sum_ref",
+    "group_writeback_counts",
+    "group_waste_fraction",
+]
+
+
+class GroupReduceStrategy(enum.Enum):
+    SEGMENT = "segment"
+    PARALLEL = "parallel"
+    ACCUMULATE = "accumulate"
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentGroup:
+    """User-facing schedule handle: ``parallelize(j, GPUGroup, r, strategy)``
+    in the paper's CIN becomes ``SegmentGroup(group_size=r, strategy=...)``
+    here."""
+
+    group_size: int = 32
+    strategy: GroupReduceStrategy = GroupReduceStrategy.SEGMENT
+
+    def __post_init__(self):
+        if self.group_size < 1:
+            raise ValueError("group_size must be >= 1")
+
+
+def segment_sum_ref(partials: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    """Ground-truth oracle: plain segment sum (strategy-independent math)."""
+    return jax.ops.segment_sum(partials, seg_ids, num_segments=num_segments)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "group_size", "strategy"))
+def segment_group_reduce(
+    partials: jax.Array,  # (T, C) per-lane partial results
+    seg_ids: jax.Array,  # (T,) int32 non-decreasing segment ids
+    num_segments: int,
+    group_size: int = 32,
+    strategy: GroupReduceStrategy = GroupReduceStrategy.SEGMENT,
+) -> jax.Array:
+    """Executable spec of grouped reduction with explicit group structure.
+
+    Mathematically equals ``segment_sum`` for SEGMENT/ACCUMULATE; PARALLEL
+    additionally *asserts* (by construction) the single-writeback contract:
+    every lane in a group must share the group's first segment id — lanes
+    violating it are dropped, mirroring the GPU kernel where they would
+    simply never be accumulated by the one writeback thread.
+    """
+    T, C = partials.shape
+    G = group_size
+    if T % G:
+        raise ValueError(f"T={T} not a multiple of group_size={G}")
+    n_groups = T // G
+    gp = partials.reshape(n_groups, G, C)
+    gs = seg_ids.reshape(n_groups, G)
+
+    if strategy == GroupReduceStrategy.ACCUMULATE:
+        return segment_sum_ref(partials, seg_ids, num_segments)
+
+    if strategy == GroupReduceStrategy.PARALLEL:
+        leader = gs[:, :1]  # single writeback segment per group
+        mask = (gs == leader).astype(partials.dtype)[..., None]
+        group_tot = jnp.sum(gp * mask, axis=1)  # (n_groups, C)
+        return jax.ops.segment_sum(group_tot, leader[:, 0], num_segments=num_segments)
+
+    # SEGMENT: per-group one-hot reduce (what the Pallas kernel does on the
+    # MXU), then cross-group carry accumulation. Local segment ids are
+    # offsets from the group's first segment, clamped into [0, G): with
+    # non-decreasing seg_ids a group of G lanes spans at most G distinct
+    # segments, but sparse matrices can skip ids, so lanes whose offset
+    # overflows the local window fall back to accumulate-writeback.
+    first = gs[:, :1]
+    local = gs - first  # (n_groups, G) >= 0
+    in_window = local < G
+    local_c = jnp.clip(local, 0, G - 1)
+    onehot = jax.nn.one_hot(local_c, G, dtype=partials.dtype)
+    onehot = onehot * in_window[..., None].astype(partials.dtype)
+    seg_tot = jnp.einsum("ngs,ngc->nsc", onehot, gp)  # (n_groups, G, C)
+    # writeback: local slot s of group n targets global segment first[n]+s
+    targets = jnp.clip(first + jnp.arange(G)[None, :], 0, num_segments - 1)
+    out = jax.ops.segment_sum(
+        seg_tot.reshape(-1, C), targets.reshape(-1), num_segments=num_segments
+    )
+    # overflow lanes (rare: segment-id jumps > G inside one group)
+    ov_mask = (~in_window).astype(partials.dtype)[..., None]
+    ov = jax.ops.segment_sum(
+        (gp * ov_mask).reshape(-1, C),
+        jnp.clip(gs, 0, num_segments - 1).reshape(-1),
+        num_segments=num_segments,
+    )
+    return out + ov
+
+
+def group_writeback_counts(seg_ids, group_size: int):
+    """Analytic model input: distinct segments per group = number of
+    writebacks a SEGMENT-strategy group performs. Drives the selector's
+    napkin math and the Table-1/2 benchmarks."""
+    T = seg_ids.shape[0]
+    G = group_size
+    gs = seg_ids.reshape(T // G, G)
+    changes = jnp.concatenate(
+        [jnp.ones((gs.shape[0], 1), jnp.int32),
+         (gs[:, 1:] != gs[:, :-1]).astype(jnp.int32)], axis=1)
+    return jnp.sum(changes, axis=1)
+
+
+def group_waste_fraction(row_lengths, group_size: int) -> float:
+    """Paper challenge (1): fraction of lanes wasted when rows shorter than
+    the group still occupy a full group (zero-extension padding waste)."""
+    import numpy as np
+
+    lengths = np.asarray(row_lengths)
+    lengths = lengths[lengths > 0]
+    if lengths.size == 0:
+        return 0.0
+    padded = group_size * np.ceil(lengths / group_size)
+    return float(1.0 - lengths.sum() / padded.sum())

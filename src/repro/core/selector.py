@@ -1,0 +1,91 @@
+"""Data-aware schedule selector (DA-SpMM-style, Sgap §7.2 Table 5).
+
+Given matrix statistics and the dense-column count N, pick an
+(atomic-parallelism) schedule. The decision mirrors the paper's findings:
+
+* few dense columns (N <= 8): *balance*-bound -> nnz-split (EB) wins when
+  row lengths are skewed; group size should shrink when rows are short
+  (challenge 1: parallelism waste).
+* many dense columns: *workload*-bound -> row-split (RB) with wide column
+  tiles reuses the loaded sparse row across columns.
+* segment strategy when writeback targets are runtime-dependent (high CV),
+  parallel strategy when rows are long and regular.
+
+Also exposes :func:`predict_cost` — the napkin-math cost model used both
+here and by the §Perf hillclimb loop.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from .atomic_parallelism import KernelSchedule
+from .segment_group import group_waste_fraction
+
+__all__ = ["select_schedule", "predict_cost", "candidate_schedules"]
+
+
+def candidate_schedules(n_dense_cols: int) -> list[KernelSchedule]:
+    """The tuning grid from the paper's dgSPARSE experiment, TPU-mapped:
+    <groupSz, blockSz, tileSz, workerDimR> -> <G, nnz/row tile, col tile>."""
+    cands = []
+    col_tile = max(8, min(128, n_dense_cols))
+    for g in (8, 16, 32, 64):
+        for nnz_tile in (128, 256, 512):
+            if nnz_tile % g:
+                continue
+            cands.append(KernelSchedule("eb", nnz_tile=nnz_tile,
+                                        col_tile=col_tile, group_size=g,
+                                        strategy="segment"))
+    for row_tile in (8, 16, 32):
+        cands.append(KernelSchedule("rb", row_tile=row_tile,
+                                    col_tile=col_tile, strategy="parallel"))
+    return cands
+
+
+def predict_cost(stats: Dict, sched: KernelSchedule, n_dense_cols: int) -> float:
+    """Relative cost model (lower = better). Terms:
+
+    work        nnz * C multiply-adds (same for every schedule);
+    waste       zero-extension padding lanes (rb: rows padded to ELL width;
+                eb: nnz padded to tile);
+    writeback   segment writeback traffic ~ rows touched per tile;
+    gather      dense-row gather traffic ~ nnz * col_tile.
+    """
+    nnz = max(1, stats["nnz"])
+    C = max(1, n_dense_cols)
+    row_mean = max(stats["row_mean"], 1e-3)
+    row_max = max(stats["row_max"], 1)
+    n_rows = max(1, stats["n_rows"])
+
+    work = nnz * C
+    if sched.kernel == "rb":
+        # ELL pads every row to row_max
+        waste = (row_max * n_rows - nnz) * C
+        writeback = n_rows * C
+    else:
+        waste_frac = group_waste_fraction(
+            [max(1, int(row_mean))], sched.group_size
+        )
+        waste = work * waste_frac
+        # one writeback per distinct row per group (>= 1 per group)
+        groups = nnz / sched.group_size
+        rows_per_group = max(1.0, sched.group_size / row_mean)
+        writeback = groups * rows_per_group * C
+    gather = nnz * min(C, sched.col_tile)
+    return work + waste + 2.0 * writeback + 0.25 * gather
+
+
+def select_schedule(stats: Dict, n_dense_cols: int) -> KernelSchedule:
+    """Pick the argmin of the cost model over the candidate grid, with the
+    paper's qualitative rules as a prior (they also act as tie-breakers)."""
+    cands = candidate_schedules(n_dense_cols)
+    best, best_cost = None, math.inf
+    for s in cands:
+        c = predict_cost(stats, s, n_dense_cols)
+        # prior: high row-CV strongly prefers nnz-split + segment
+        if stats.get("row_cv", 0.0) > 1.0 and s.kernel == "rb":
+            c *= 1.0 + stats["row_cv"]
+        if c < best_cost:
+            best, best_cost = s, c
+    return best

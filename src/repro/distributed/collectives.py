@@ -1,0 +1,40 @@
+"""Distributed-optimization helpers: gradient compression + overlap notes.
+
+Gradient compression (for the data-parallel all-reduce): gradients are
+quantized *before* the XLA-inserted all-reduce — because the all-reduce
+operates on whatever dtype the gradient tree carries at that point, a
+bf16/int8 tree moves 2×/4× fewer bytes on the wire. int8 uses per-tensor
+symmetric scaling (scale carried in f32, negligible traffic).
+
+Compute/comm overlap itself is delegated to XLA's latency-hiding scheduler
+(collective ops are asynchronous on TPU; the scan-over-layers structure
+exposes per-layer all-reduces that overlap with the next layer's matmuls).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_tree(grads, method: str):
+    if method == "bf16":
+        return {"m": "bf16",
+                "data": jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)}
+    if method == "int8":
+        def q(g):
+            g = g.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            return (jnp.clip(jnp.round(g / scale), -127, 127)
+                    .astype(jnp.int8), scale)
+        return {"m": "int8", "data": jax.tree.map(q, grads)}
+    raise ValueError(f"unknown compression {method!r}")
+
+
+def decompress_tree(packed):
+    if packed["m"] == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), packed["data"])
+    if packed["m"] == "int8":
+        return jax.tree.map(
+            lambda qs: qs[0].astype(jnp.float32) * qs[1], packed["data"],
+            is_leaf=lambda x: isinstance(x, tuple))
+    raise ValueError(packed["m"])

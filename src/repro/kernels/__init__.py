@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the Sgap segment-group machinery.
+
+Each kernel module pairs a ``pl.pallas_call`` + BlockSpec implementation
+with the pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
+padding/format wrappers the framework calls.
+"""
+from . import ref  # noqa: F401
+from .grouped_matmul import grouped_matmul  # noqa: F401
+from .ops import sddmm, spmm  # noqa: F401
+from .segment_reduce import segment_reduce  # noqa: F401
+from .spmm_eb import spmm_eb  # noqa: F401
+from .spmm_rb import spmm_rb  # noqa: F401

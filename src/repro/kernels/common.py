@@ -1,0 +1,92 @@
+"""Shared in-kernel building blocks for the segment-group kernels.
+
+``group_reduce_scatter`` is the TPU realization of the paper's segment
+group (DESIGN.md §2): within each width-G group it
+
+1. finds segment runs (boundary cumsum — replaces the GPU's runtime
+   writeback-thread election),
+2. reduces the run partials with a (G × G) one-hot matmul — the MXU
+   analogue of the warp shuffle tree,
+3. writes each live run back with a read-modify-write into the output
+   block — the analogue of the paper's multiple writeback threads; the
+   sequential TPU grid makes the RMW race-free ("atomic" for free).
+
+Strategy variants:
+  'segment'     full machinery above (runtime writeback targets);
+  'parallel'    contract: all lanes of a group share one segment -> plain
+                sum + single writeback (one writeback thread);
+  'accumulate'  per-lane RMW (the atomicAdd baseline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmw_row(out_ref, row, delta):
+    """out_ref[row, :] += delta  (delta shape (1, C)), dynamic row index."""
+    idx = (pl.dslice(row, 1), slice(None))
+    out_ref[idx] = out_ref[idx] + delta
+
+
+def group_reduce_scatter(rows, partial, out_ref, group_size: int,
+                         strategy: str = "segment"):
+    """Reduce ``partial`` (T, C) by ``rows`` (T,) into ``out_ref`` (R, C).
+
+    ``rows`` need not be globally sorted; sorted input minimizes writebacks
+    (each unsorted transition opens a new run — correct, just more RMWs),
+    which is exactly the paper's "writeback thread decided at runtime".
+    """
+    T, C = partial.shape
+    G = group_size
+    assert T % G == 0, (T, G)
+    n_groups = T // G
+
+    if strategy == "accumulate":
+        def lane_body(t, _):
+            _rmw_row(out_ref, rows[t], partial[t][None, :])
+            return 0
+        jax.lax.fori_loop(0, T, lane_body, 0)
+        return
+
+    if strategy == "parallel":
+        def par_body(n, _):
+            p = jax.lax.dynamic_slice(partial, (n * G, 0), (G, C))
+            _rmw_row(out_ref, rows[n * G], jnp.sum(p, axis=0)[None, :])
+            return 0
+        jax.lax.fori_loop(0, n_groups, par_body, 0)
+        return
+
+    assert strategy == "segment", strategy
+
+    def group_body(n, _):
+        r = jax.lax.dynamic_slice(rows, (n * G,), (G,))
+        p = jax.lax.dynamic_slice(partial, (n * G, 0), (G, C))
+        # run boundaries -> local segment slots in [0, G)
+        prev = jnp.concatenate([jnp.full((1,), -1, r.dtype), r[:-1]])
+        local = jnp.cumsum((r != prev).astype(jnp.int32)) - 1  # (G,)
+        onehot = (
+            local[:, None]
+            == jax.lax.broadcasted_iota(jnp.int32, (G, G), 1)
+        ).astype(p.dtype)  # (G lanes, G slots)
+        seg_tot = jnp.dot(onehot.T, p,
+                          preferred_element_type=jnp.float32)  # (G, C) MXU
+        # slot -> global row (slots past the last run get -1 = dead)
+        seg_rows = jnp.max(
+            jnp.where(onehot > 0, r[:, None], -1), axis=0
+        )  # (G,)
+
+        def slot_body(s, _):
+            row = seg_rows[s]
+
+            @pl.when(row >= 0)
+            def _():
+                _rmw_row(out_ref, row,
+                         jax.lax.dynamic_slice(seg_tot, (s, 0), (1, C)))
+            return 0
+
+        jax.lax.fori_loop(0, G, slot_body, 0)
+        return 0
+
+    jax.lax.fori_loop(0, n_groups, group_body, 0)

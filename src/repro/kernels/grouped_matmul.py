@@ -1,0 +1,71 @@
+"""Grouped (expert-segment) matmul Pallas kernel — segment group applied to
+MoE dispatch (DESIGN.md §4.1).
+
+MoE expert application is sparse-dense hybrid algebra in the paper's DF
+formulation: Q₀ = token→expert routing (sparse), ⊗ = expert GEMM,
+⊕ = segment-sum over each expert's token segment. Tokens arrive sorted by
+expert and *capacity-padded so every token tile belongs to exactly one
+expert* — zero extension again: padding tokens multiply real expert
+weights and are masked afterwards.
+
+The tile→expert map is scalar-prefetched so the weight BlockSpec can
+select the expert block at DMA-schedule time (the TPU analogue of the
+runtime writeback-thread election: the *read* side is decided at runtime
+here).
+
+Grid: (token_tiles, f_tiles, d_tiles) — contraction axis innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(emap_ref, x_ref, w_ref, out_ref):
+    del emap_ref  # consumed by the index maps
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (TT, DT)
+    w = w_ref[...].astype(jnp.float32)[0]  # (DT, FT)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("token_tile", "f_tile", "d_tile", "interpret"),
+)
+def grouped_matmul(x, tile_experts, weights, *, token_tile: int = 128,
+                   f_tile: int = 128, d_tile: int = 128,
+                   interpret: bool = True):
+    """x: (T_pad, D) tokens sorted by expert, T_pad % token_tile == 0;
+    tile_experts: (T_pad // token_tile,) int32 expert of each token tile;
+    weights: (E, D, F). Returns (T_pad, F) f32."""
+    t_pad, d = x.shape
+    e, dw, f = weights.shape
+    assert dw == d and t_pad % token_tile == 0
+    assert d % d_tile == 0 and f % f_tile == 0
+
+    grid = (t_pad // token_tile, f // f_tile, d // d_tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, d_tile), lambda i, j, k, emap: (i, k)),
+            pl.BlockSpec((1, d_tile, f_tile),
+                         lambda i, j, k, emap: (emap[i], k, j)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, f_tile),
+                               lambda i, j, k, emap: (i, j)),
+    )
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t_pad, f), jnp.float32),
+        interpret=interpret,
+    )(tile_experts, x, weights)

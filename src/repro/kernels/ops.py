@@ -1,0 +1,132 @@
+"""jit'd wrappers around the Pallas kernels: format glue, padding (zero
+extension), and result cropping. These are what the rest of the framework
+calls; the raw kernels stay shape-strict.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.atomic_parallelism import KernelSchedule
+from ..sparse.formats import CSR, ELL, GroupedCOO, round_up
+from . import ref
+from .sddmm import sddmm as _sddmm_kernel
+from .spmm_eb import spmm_eb as _spmm_eb
+from .spmm_rb import spmm_rb as _spmm_rb
+
+_VMEM_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
+
+
+def _pad_cols(b, col_tile):
+    k, n = b.shape
+    n_pad = round_up(n, col_tile)
+    if n_pad != n:
+        b = jnp.pad(b, ((0, 0), (0, n_pad - n)))
+    return b, n
+
+
+def vmem_footprint_eb(k, n_rows, sched: KernelSchedule, itemsize=4) -> int:
+    """Working set the EB kernel claims per grid cell (see spmm_eb.py)."""
+    return itemsize * (
+        k * sched.col_tile            # B block
+        + sched.nnz_tile * sched.col_tile  # partials
+        + n_rows * sched.col_tile     # out block
+        + 3 * sched.nnz_tile          # triplets
+    )
+
+
+def spmm(a, b, schedule: KernelSchedule | None = None, *,
+         impl: str = "pallas", interpret: bool = True):
+    """out = A @ B for sparse A (CSR / GroupedCOO / ELL) and dense B.
+
+    impl='ref' runs the pure-jnp oracle; impl='pallas' runs the kernel the
+    schedule selects (eb -> GroupedCOO path, rb -> ELL path).
+    """
+    if schedule is None:
+        schedule = KernelSchedule("eb")
+
+    if impl == "ref":
+        if isinstance(a, GroupedCOO):
+            return ref.spmm_coo_ref(a.rows, a.cols, a.vals, b, a.shape[0])
+        if isinstance(a, CSR):
+            coo = a.tocoo()
+            return ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, b, a.shape[0])
+        if isinstance(a, ELL):
+            return ref.spmm_ell_ref(a.cols, a.vals, b, a.shape[0])
+        raise TypeError(type(a))
+
+    col_tile = min(schedule.col_tile, round_up(b.shape[1], 8))
+    b_pad, n = _pad_cols(b, col_tile)
+
+    if schedule.kernel == "eb":
+        if isinstance(a, CSR):
+            a = GroupedCOO.fromcsr(a, schedule.nnz_tile)
+        assert isinstance(a, GroupedCOO), type(a)
+        if a.nnz_tile != schedule.nnz_tile:
+            a = _regroup(a, schedule.nnz_tile)
+        out = _spmm_eb(
+            a.rows, a.cols, a.vals, b_pad, n_rows=a.shape[0],
+            nnz_tile=schedule.nnz_tile, col_tile=col_tile,
+            group_size=schedule.group_size, strategy=schedule.strategy,
+            interpret=interpret)
+        return out[:, :n]
+
+    # rb path
+    if isinstance(a, CSR):
+        a = ELL.fromcsr(a, row_tile=schedule.row_tile)
+    assert isinstance(a, ELL), type(a)
+    r_pad = round_up(a.n_rows_padded, schedule.row_tile)
+    ecols, evals = a.cols, a.vals
+    if r_pad != a.n_rows_padded:
+        pad = r_pad - a.n_rows_padded
+        ecols = jnp.pad(ecols, ((0, pad), (0, 0)))
+        evals = jnp.pad(evals, ((0, pad), (0, 0)))
+    out = _spmm_rb(ecols, evals, b_pad, row_tile=schedule.row_tile,
+                   col_tile=col_tile, interpret=interpret)
+    return out[: a.shape[0], :n]
+
+
+def _regroup(a: GroupedCOO, nnz_tile: int) -> GroupedCOO:
+    """Re-pad a GroupedCOO to a different tile size."""
+    nnz = a.nnz
+    padded = max(round_up(max(nnz, 1), nnz_tile), nnz_tile)
+    rows, cols, vals = a.rows[:nnz], a.cols[:nnz], a.vals[:nnz]
+    pad = padded - nnz
+    return GroupedCOO(
+        rows=jnp.concatenate([rows, jnp.full((pad,), a.shape[0] - 1, jnp.int32)]),
+        cols=jnp.concatenate([cols, jnp.zeros((pad,), jnp.int32)]),
+        vals=jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)]),
+        shape=a.shape, nnz=nnz, nnz_tile=nnz_tile)
+
+
+def sddmm(rows, cols, a, b, scale=None, *, nnz_tile: int = 256,
+          impl: str = "pallas", interpret: bool = True):
+    """vals[t] = <A[rows[t]], B[cols[t]]> (* scale[t]); rows/cols (nnz,)."""
+    if impl == "ref":
+        return ref.sddmm_ref(rows, cols, a, b, scale)
+    nnz = rows.shape[0]
+    nnz_pad = round_up(max(nnz, 1), nnz_tile)
+    if scale is None:
+        scale = jnp.ones((nnz,), jnp.float32)
+    pad = nnz_pad - nnz
+    rows_p = jnp.pad(rows, (0, pad))
+    cols_p = jnp.pad(cols, (0, pad))
+    scale_p = jnp.pad(scale, (0, pad))  # zero scale masks padded lanes
+    d = a.shape[1]
+    d_tile = min(128, round_up(d, 8))
+    d_pad = round_up(d, d_tile)
+    if d_pad != d:
+        a = jnp.pad(a, ((0, 0), (0, d_pad - d)))
+        b = jnp.pad(b, ((0, 0), (0, d_pad - d)))
+    out = _sddmm_kernel(rows_p, cols_p, a, b, scale_p, nnz_tile=nnz_tile,
+                        d_tile=d_tile, interpret=interpret)
+    return out[:nnz]
+
+
+def expert_tile_map(group_sizes: np.ndarray, token_tile: int) -> np.ndarray:
+    """tile -> expert map for capacity-padded grouped matmul: expert e owns
+    ceil(group_sizes[e] / token_tile) consecutive tiles."""
+    tiles = []
+    for e, g in enumerate(group_sizes):
+        tiles.extend([e] * int(np.ceil(g / token_tile)))
+    return np.asarray(tiles, np.int32)

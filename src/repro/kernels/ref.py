@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests ``assert_allclose`` against,
+and the ``impl='ref'`` execution path of ``repro.sparse.ops``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_coo_ref(rows, cols, vals, b, n_rows):
+    """SpMM from COO triplets: out[r] += val * B[c]  (segment-sum form)."""
+    partial = vals[:, None].astype(jnp.float32) * b[cols].astype(jnp.float32)
+    return jax.ops.segment_sum(partial, rows, num_segments=n_rows)
+
+
+def spmm_ell_ref(ecols, evals, b, n_rows):
+    """SpMM from ELL: per-row padded gather + reduce over the width axis."""
+    gathered = b[ecols].astype(jnp.float32)  # (R, W, C)
+    out = jnp.sum(evals[..., None].astype(jnp.float32) * gathered, axis=1)
+    return out[:n_rows]
+
+
+def spmm_dense_ref(a_dense, b):
+    return a_dense.astype(jnp.float32) @ b.astype(jnp.float32)
+
+
+def sddmm_ref(rows, cols, a, b, scale=None):
+    """SDDMM: vals[t] = <A[rows[t]], B[cols[t]]> (optionally * scale[t])."""
+    prod = jnp.sum(
+        a[rows].astype(jnp.float32) * b[cols].astype(jnp.float32), axis=-1
+    )
+    if scale is not None:
+        prod = prod * scale.astype(jnp.float32)
+    return prod
+
+
+def segment_reduce_ref(data, seg_ids, num_segments):
+    return jax.ops.segment_sum(data.astype(jnp.float32), seg_ids,
+                               num_segments=num_segments)
+
+
+def grouped_matmul_ref(x, expert_ids, weights):
+    """Per-token expert matmul: out[t] = x[t] @ W[expert_ids[t]].
+
+    x: (T, D), expert_ids: (T,) int32, weights: (E, D, F) -> (T, F).
+    Oracle uses a gather of the full expert weight per token (memory-heavy
+    but simple); the kernel exploits sorted/aligned expert ids instead.
+    """
+    w = weights[expert_ids]  # (T, D, F)
+    return jnp.einsum(
+        "td,tdf->tf", x.astype(jnp.float32), w.astype(jnp.float32)
+    )

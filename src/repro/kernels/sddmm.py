@@ -1,0 +1,65 @@
+"""SDDMM Pallas kernel: vals[t] = <A[rows[t]], B[cols[t]]> (* scale[t]).
+
+The second sparse-dense hybrid algebra of the paper (Eq. 2c) — reduction
+here runs along two *dense* dimensions, so the segment group degenerates
+to a per-lane feature-axis reduce; what Sgap contributes is the nnz-split
+tiling + zero extension (padded lanes produce garbage that is masked by
+scale=0).
+
+Grid: (nnz_tiles, d_tiles) — feature axis innermost, accumulating the
+per-lane dot products.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sddmm_kernel(rows_ref, cols_ref, scale_ref, a_ref, b_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    rows = rows_ref[...]
+    cols = cols_ref[...]
+    a = a_ref[...].astype(jnp.float32)  # (M, Dt)
+    b = b_ref[...].astype(jnp.float32)  # (N, Dt)
+    ga = jnp.take(a, rows, axis=0)  # (T, Dt)
+    gb = jnp.take(b, cols, axis=0)  # (T, Dt)
+    out_ref[...] += jnp.sum(ga * gb, axis=-1)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _scale():
+        out_ref[...] *= scale_ref[...].astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nnz_tile", "d_tile", "interpret"))
+def sddmm(rows, cols, a, b, scale=None, *, nnz_tile: int = 256,
+          d_tile: int = 128, interpret: bool = True):
+    """rows/cols/scale: (nnz_pad,) padded to nnz_tile (scale 0 on padding);
+    a: (M, D), b: (N, D) with D padded to d_tile by the wrapper."""
+    nnz_pad = rows.shape[0]
+    m, d = a.shape
+    n, _ = b.shape
+    assert nnz_pad % nnz_tile == 0 and d % d_tile == 0
+    if scale is None:
+        scale = jnp.ones((nnz_pad,), jnp.float32)
+    grid = (nnz_pad // nnz_tile, d // d_tile)
+    return pl.pallas_call(
+        _sddmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nnz_tile,), lambda i, u: (i,)),
+            pl.BlockSpec((nnz_tile,), lambda i, u: (i,)),
+            pl.BlockSpec((nnz_tile,), lambda i, u: (i,)),
+            pl.BlockSpec((m, d_tile), lambda i, u: (0, u)),
+            pl.BlockSpec((n, d_tile), lambda i, u: (0, u)),
+        ],
+        out_specs=pl.BlockSpec((nnz_tile,), lambda i, u: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nnz_pad,), jnp.float32),
+        interpret=interpret,
+    )(rows, cols, scale, a, b)

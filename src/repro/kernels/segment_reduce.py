@@ -1,0 +1,54 @@
+"""Standalone segment-group reduce kernel: out[s] = Σ_{t: seg[t]=s} data[t].
+
+The paper's ``segReduceWarp<T, G>`` macro instruction (Sgap §5.3) as a
+first-class Pallas kernel: the same group machinery as ``spmm_eb`` minus
+the gather/multiply front-end. Used directly by the SSD chunk combine and
+as the microbenchmark target for Table 1/2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import group_reduce_scatter
+
+
+def _segred_kernel(seg_ref, data_ref, out_ref, *, group_size, strategy):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    group_reduce_scatter(
+        seg_ref[...], data_ref[...].astype(jnp.float32), out_ref,
+        group_size, strategy)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "tile", "group_size", "strategy",
+                     "interpret"),
+)
+def segment_reduce(seg_ids, data, *, num_segments: int, tile: int = 256,
+                   group_size: int = 32, strategy: str = "segment",
+                   interpret: bool = True):
+    """seg_ids: (T_pad,) non-decreasing (padding -> num_segments - 1 with
+    zero data rows); data: (T_pad, C)."""
+    t_pad, c = data.shape
+    assert t_pad % tile == 0
+    grid = (1, t_pad // tile)
+    kernel = functools.partial(
+        _segred_kernel, group_size=group_size, strategy=strategy)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda j, i: (i,)),
+            pl.BlockSpec((tile, c), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, c), lambda j, i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, c), jnp.float32),
+        interpret=interpret,
+    )(seg_ids, data)

@@ -1,0 +1,79 @@
+"""nnz-split (EB) segment-group SpMM Pallas kernel — the paper's
+``{<1 nnz, c col>, r}`` algorithm (Sgap §6.2, Listing 6), TPU-native.
+
+Grid: (col_tiles, nnz_tiles) — nnz innermost so consecutive grid steps
+revisit the same output block and accumulation is race-free.
+
+Per grid cell (one ``NNZ_TILE × COL_TILE`` block):
+  1. gather dense rows      B[cols]            (zero extension: padded
+                                                lanes gather row 0, val 0)
+  2. scale by values        P = vals ⊙ B[cols]
+  3. segment-group reduce   width-G one-hot MXU reduce + runtime
+                            writeback (see kernels/common.py)
+
+VMEM working set per cell:  B block (K × COL_TILE) + partials
+(NNZ_TILE × COL_TILE) + out block (n_rows × COL_TILE). The kernel targets
+the paper's *balance-intensive* regime (few dense columns), where these
+comfortably fit VMEM; ``ops.spmm`` asserts the footprint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import group_reduce_scatter
+
+
+def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, out_ref, *,
+                    group_size: int, strategy: str):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    rows = rows_ref[...]
+    cols = cols_ref[...]
+    vals = vals_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+
+    gathered = jnp.take(b, cols, axis=0)  # (T, C)
+    partial = gathered * vals[:, None]
+    group_reduce_scatter(rows, partial, out_ref, group_size, strategy)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows", "nnz_tile", "col_tile", "group_size",
+                     "strategy", "interpret"),
+)
+def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
+            col_tile: int = 128, group_size: int = 32,
+            strategy: str = "segment", interpret: bool = True):
+    """out (n_rows, N) = scatter-reduce over padded COO triplets × B.
+
+    Inputs must be pre-padded: len(vals) % nnz_tile == 0 (see
+    ``formats.GroupedCOO``) and b.shape[1] % col_tile == 0 (``ops.spmm``
+    does the column padding).
+    """
+    nnz_pad = vals.shape[0]
+    k, n = b.shape
+    assert nnz_pad % nnz_tile == 0 and n % col_tile == 0, (nnz_pad, n)
+    grid = (n // col_tile, nnz_pad // nnz_tile)
+
+    kernel = functools.partial(
+        _spmm_eb_kernel, group_size=group_size, strategy=strategy)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
+            pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
+            pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
+            pl.BlockSpec((k, col_tile), lambda j, i: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n_rows, col_tile), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, n), jnp.float32),
+        interpret=interpret,
+    )(rows, cols, vals, b)

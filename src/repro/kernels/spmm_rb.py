@@ -1,0 +1,68 @@
+"""Row-split (RB) SpMM Pallas kernel — the paper's ``{<g row, c col>, 1}``
+family (parallel reduction: exactly one writeback per row).
+
+Feed format: ELL (per-row padded, see ``formats.ELL``) — padding is the
+zero extension the paper legitimizes: padded slots gather B[0] scaled by
+0.0 and flow through the vector datapath unpredicated.
+
+Grid: (row_tiles, col_tiles, width_tiles) — width innermost, accumulating
+into the same (ROW_TILE × COL_TILE) output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_rb_kernel(cols_ref, vals_ref, b_ref, out_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cols = cols_ref[...]  # (R, Wt)
+    vals = vals_ref[...].astype(jnp.float32)  # (R, Wt)
+    b = b_ref[...].astype(jnp.float32)  # (K, C)
+
+    r, wt = cols.shape
+    gathered = jnp.take(b, cols.reshape(-1), axis=0).reshape(r, wt, -1)
+    out_ref[...] += jnp.sum(vals[..., None] * gathered, axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("row_tile", "col_tile", "width_tile", "interpret"),
+)
+def spmm_rb(ecols, evals, b, *, row_tile: int = 8, col_tile: int = 128,
+            width_tile: int | None = None, interpret: bool = True):
+    """out (R_pad, N) from ELL arrays (R_pad, W) and dense B (K, N).
+
+    R_pad % row_tile == 0 and N % col_tile == 0 are the wrapper's job
+    (``ops.spmm``); W is padded to width_tile here.
+    """
+    r_pad, w = ecols.shape
+    k, n = b.shape
+    if width_tile is None:
+        width_tile = min(w, 64)
+    w_pad = ((w + width_tile - 1) // width_tile) * width_tile
+    if w_pad != w:
+        pad = w_pad - w
+        ecols = jnp.pad(ecols, ((0, 0), (0, pad)))
+        evals = jnp.pad(evals, ((0, 0), (0, pad)))
+    assert r_pad % row_tile == 0 and n % col_tile == 0
+
+    grid = (r_pad // row_tile, n // col_tile, w_pad // width_tile)
+    return pl.pallas_call(
+        _spmm_rb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, width_tile), lambda i, j, u: (i, u)),
+            pl.BlockSpec((row_tile, width_tile), lambda i, j, u: (i, u)),
+            pl.BlockSpec((k, col_tile), lambda i, j, u: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, col_tile), lambda i, j, u: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, n), jnp.float32),
+        interpret=interpret,
+    )(ecols, evals, b)

@@ -1,0 +1,62 @@
+"""Training launcher.
+
+Real-hardware entry point (also runs on CPU at reduced scale):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b \
+        [--scale smoke] [--steps 100] [--ckpt-dir /tmp/ckpt] \
+        [--microbatches 8] [--compress bf16]
+
+``--scale smoke`` runs the reduced same-family config (CPU-friendly);
+``--scale full`` builds the exact assigned config (needs a real pod —
+on CPU it will OOM, use the dry-run instead).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import ARCHS, smoke_config
+from ..data.synthetic import ShardedTokenStream
+from ..models import get_model
+from ..train.optimizer import AdamW, cosine_schedule
+from ..train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b", choices=sorted(ARCHS))
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", default=None, choices=[None, "bf16", "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.scale == "smoke":
+        cfg = smoke_config(cfg)
+    api = get_model(cfg)
+
+    data = ShardedTokenStream(cfg.vocab_size, args.seq, args.batch,
+                              host_index=jax.process_index(),
+                              host_count=jax.process_count())
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=min(100, args.steps // 10
+                                                       or 1),
+                                   total=args.steps))
+    trainer = Trainer(
+        api, opt, iter(data), ckpt_dir=args.ckpt_dir,
+        tcfg=TrainerConfig(total_steps=args.steps,
+                           ckpt_every=args.ckpt_every,
+                           microbatches=args.microbatches,
+                           grad_compression=args.compress))
+    state = trainer.init_or_restore(jax.random.PRNGKey(0))
+    trainer.run(state)
+
+
+if __name__ == "__main__":
+    main()

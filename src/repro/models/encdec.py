@@ -1,0 +1,216 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, enc_len, D) directly. Positions are
+sinusoidal on both sides (Whisper: sinusoidal encoder / learned decoder —
+noted in DESIGN.md changed assumptions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attention, flash_attention
+from .layers import (apply_dense, apply_mlp, apply_norm, embed, init_dense,
+                     init_embedding, init_mlp, init_norm, layer_scan,
+                     lm_loss_from_features, unembed)
+from .transformer import init_attn
+
+
+def sinusoidal(n: int, d: int):
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = jnp.arange(n)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _mha(cfg, p, xq, xkv, causal):
+    b, sq, _ = xq.shape
+    q = apply_dense(p["wq"], xq).reshape(b, sq, cfg.n_heads, cfg.d_head)
+    k = apply_dense(p["wk"], xkv).reshape(b, xkv.shape[1], cfg.n_kv_heads,
+                                          cfg.d_head)
+    v = apply_dense(p["wv"], xkv).reshape(b, xkv.shape[1], cfg.n_kv_heads,
+                                          cfg.d_head)
+    o = flash_attention(q, k, v, causal, cfg.q_chunk, cfg.kv_chunk)
+    return apply_dense(p["wo"], o.reshape(b, sq, cfg.attn_dim))
+
+
+def init_enc_layer(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg, cfg.d_model), "attn": init_attn(cfg, k1),
+            "ln2": init_norm(cfg, cfg.d_model), "mlp": init_mlp(cfg, k2)}
+
+
+def init_dec_layer(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model), "self_attn": init_attn(cfg, k1),
+        "ln_x": init_norm(cfg, cfg.d_model), "cross_attn": init_attn(cfg, k2),
+        "ln2": init_norm(cfg, cfg.d_model), "mlp": init_mlp(cfg, k3),
+    }
+
+
+def init_params(cfg, key):
+    ke, kenc, kdec, kp = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: init_enc_layer(cfg, k))(
+        jax.random.split(kenc, cfg.n_encoder_layers))
+    dec = jax.vmap(lambda k: init_dec_layer(cfg, k))(
+        jax.random.split(kdec, cfg.n_layers))
+    del kp
+    return {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model,
+                                cfg.param_dtype),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm": init_norm(cfg, cfg.d_model),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg, params, frames):
+    """frames: (B, S_enc, D) stub embeddings -> (B, S_enc, D)."""
+    x = frames.astype(cfg.compute_dtype)
+    x = x + sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def layer(p_l, x):
+        h = apply_norm(cfg, p_l["ln1"], x)
+        x = x + _mha(cfg, p_l["attn"], h, h, causal=False)
+        return x + apply_mlp(cfg, p_l["mlp"], apply_norm(cfg, p_l["ln2"], x))
+
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def step(x, p_l):
+        return layer(p_l, x), None
+
+    x, _ = layer_scan(cfg, step, x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_train(cfg, params, tokens, enc_out):
+    x = embed(params["embed"], tokens).astype(cfg.compute_dtype)
+    x = x + sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def layer(p_l, x):
+        h = apply_norm(cfg, p_l["ln1"], x)
+        x = x + _mha(cfg, p_l["self_attn"], h, h, causal=True)
+        h = apply_norm(cfg, p_l["ln_x"], x)
+        x = x + _mha(cfg, p_l["cross_attn"], h, enc_out, causal=False)
+        return x + apply_mlp(cfg, p_l["mlp"], apply_norm(cfg, p_l["ln2"], x))
+
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def step(x, p_l):
+        return layer(p_l, x), None
+
+    x, _ = layer_scan(cfg, step, x, params["dec_layers"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def forward(cfg, params, batch, ctx=None):
+    del ctx
+    enc_out = encode(cfg, params, batch["encoder_embeds"])
+    x = decode_train(cfg, params, batch["tokens"], enc_out)
+    return unembed(params["embed"], x)
+
+
+def loss_fn(cfg, params, batch, ctx=None):
+    del ctx
+    enc_out = encode(cfg, params, batch["encoder_embeds"])
+    x = decode_train(cfg, params, batch["tokens"], enc_out)
+    return lm_loss_from_features(params["embed"], x[:, :-1],
+                                 batch["tokens"][:, 1:], batch.get("mask"))
+
+
+def init_cache(cfg, batch_size, max_len, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    kv = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.d_head)
+    ckv = (cfg.n_layers, batch_size, cfg.encoder_seq, cfg.n_kv_heads,
+           cfg.d_head)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "ck": jnp.zeros(ckv, dtype), "cv": jnp.zeros(ckv, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg, params, batch, max_len, ctx=None):
+    """Encode + cache cross-attention K/V + run the prompt tokens."""
+    del ctx
+    enc_out = encode(cfg, params, batch["encoder_embeds"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens).astype(cfg.compute_dtype)
+    x = x + sinusoidal(s, cfg.d_model).astype(x.dtype)[None]
+
+    def step(x, p_l):
+        h = apply_norm(cfg, p_l["ln1"], x)
+        q = apply_dense(p_l["self_attn"]["wq"], h).reshape(
+            b, s, cfg.n_heads, cfg.d_head)
+        k = apply_dense(p_l["self_attn"]["wk"], h).reshape(
+            b, s, cfg.n_kv_heads, cfg.d_head)
+        v = apply_dense(p_l["self_attn"]["wv"], h).reshape(
+            b, s, cfg.n_kv_heads, cfg.d_head)
+        o = flash_attention(q, k, v, True, cfg.q_chunk, cfg.kv_chunk)
+        x = x + apply_dense(p_l["self_attn"]["wo"],
+                            o.reshape(b, s, cfg.attn_dim))
+        h = apply_norm(cfg, p_l["ln_x"], x)
+        ck = apply_dense(p_l["cross_attn"]["wk"], enc_out).reshape(
+            b, enc_out.shape[1], cfg.n_kv_heads, cfg.d_head)
+        cv = apply_dense(p_l["cross_attn"]["wv"], enc_out).reshape(
+            b, enc_out.shape[1], cfg.n_kv_heads, cfg.d_head)
+        x = x + _mha(cfg, p_l["cross_attn"], h, enc_out, causal=False)
+        x = x + apply_mlp(cfg, p_l["mlp"], apply_norm(cfg, p_l["ln2"], x))
+        return x, (k, v, ck, cv)
+
+    x, (ks, vs, cks, cvs) = layer_scan(cfg, step, x, params["dec_layers"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], x[:, -1])
+    pad = max_len - s
+    return logits, {
+        "k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "ck": cks, "cv": cvs,
+        "pos": jnp.asarray(s, jnp.int32),
+    }
+
+
+def decode_step(cfg, params, cache, tokens, ctx=None):
+    del ctx
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    x = embed(params["embed"], tokens)[:, None, :].astype(cfg.compute_dtype)
+    x = x + jnp.take(sinusoidal(cache["k"].shape[2], cfg.d_model),
+                     pos[None], axis=0).astype(x.dtype)[None]
+
+    def step(x, inp):
+        p_l, k_c, v_c, ck, cv = inp
+        h = apply_norm(cfg, p_l["ln1"], x)
+        q = apply_dense(p_l["self_attn"]["wq"], h).reshape(
+            b, 1, cfg.n_heads, cfg.d_head)
+        k = apply_dense(p_l["self_attn"]["wk"], h).reshape(
+            b, 1, cfg.n_kv_heads, cfg.d_head)
+        v = apply_dense(p_l["self_attn"]["wv"], h).reshape(
+            b, 1, cfg.n_kv_heads, cfg.d_head)
+        k_c = jax.lax.dynamic_update_slice(k_c, k, (0, pos, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v, (0, pos, 0, 0))
+        o = decode_attention(q[:, 0], k_c, v_c, pos)
+        x = x + apply_dense(p_l["self_attn"]["wo"],
+                            o.reshape(b, cfg.attn_dim))[:, None]
+        h = apply_norm(cfg, p_l["ln_x"], x)
+        cq = apply_dense(p_l["cross_attn"]["wq"], h).reshape(
+            b, cfg.n_heads, cfg.d_head)
+        co = decode_attention(cq, ck, cv, ck.shape[1] - 1)
+        x = x + apply_dense(p_l["cross_attn"]["wo"],
+                            co.reshape(b, cfg.attn_dim))[:, None]
+        x = x + apply_mlp(cfg, p_l["mlp"], apply_norm(cfg, p_l["ln2"], x))
+        return x, (k_c, v_c)
+
+    x, (ks, vs) = layer_scan(
+        cfg, step, x, (params["dec_layers"], cache["k"], cache["v"],
+                       cache["ck"], cache["cv"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], x[:, 0])
+    return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"],
+                    "pos": pos + 1}

@@ -1,0 +1,48 @@
+"""PaliGemma-style VLM backbone (arXiv:2407.07726): SigLIP patch stub +
+Gemma text decoder.
+
+The vision frontend is a STUB per the assignment: ``input_specs`` provides
+post-projection patch embeddings (B, n_vision_tokens, D). The decoder is
+the shared transformer (MQA kv=1, GeGLU). PaliGemma's bidirectional
+prefix attention is approximated as causal (DESIGN.md changed
+assumptions); loss is computed on text positions only.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import transformer
+from .layers import embed, lm_loss_from_features
+
+init_params = transformer.init_params
+init_cache = transformer.init_cache
+decode_step = transformer.decode_step
+
+
+def _embeds(cfg, params, batch):
+    tok = embed(params["embed"], batch["tokens"]).astype(cfg.compute_dtype)
+    patches = batch["patch_embeds"].astype(cfg.compute_dtype)
+    return jnp.concatenate([patches, tok], axis=1)
+
+
+def forward(cfg, params, batch, ctx=None):
+    x = _embeds(cfg, params, batch)
+    logits, aux = transformer.forward(cfg, params, None, ctx,
+                                      inputs_embeds=x)
+    return logits, aux
+
+
+def loss_fn(cfg, params, batch, ctx=None):
+    x, _ = transformer.forward_features(cfg, params, None, ctx,
+                                        inputs_embeds=_embeds(cfg, params,
+                                                              batch))
+    nv = batch["patch_embeds"].shape[1]
+    text_x = x[:, nv:]
+    return lm_loss_from_features(params["embed"], text_x[:, :-1],
+                                 batch["tokens"][:, 1:], batch.get("mask"))
+
+
+def prefill(cfg, params, batch, max_len, ctx=None):
+    x = _embeds(cfg, params, batch)
+    return transformer.prefill(cfg, params, None, max_len, ctx,
+                               inputs_embeds=x)

@@ -1,0 +1,2 @@
+from .formats import COO, CSR, ELL, GroupedCOO  # noqa: F401
+from .random import matrix_stats, random_coo, random_csr  # noqa: F401

@@ -1,0 +1,90 @@
+"""Distributed SpMM via shard_map — the paper's reduction-strategy choice
+*elevated to the collective level* (DESIGN.md §2, changed assumption 2).
+
+Three partitionings of ``out = A @ B``:
+
+row         A row-partitioned over the axis; no collectives (each shard
+            owns whole output rows) — the collective analogue of parallel
+            reduction / one writeback thread.
+nnz_ar      A nnz-partitioned; each shard computes a full-height partial
+            and an **all-reduce** combines — the analogue of atomicAdd
+            (every shard "writes" every row).
+nnz_rs      A nnz-partitioned; partials combined with **reduce-scatter**
+            so each shard finalizes its own row block — the analogue of
+            segment reduction (multiple writeback shards, targets decided
+            by data layout). Moves 1/P the bytes of nnz_ar on the wire per
+            shard output.
+
+All three compute identical results; they differ in collective bytes and
+balance, which is exactly the axis the paper tunes. ``dryrun``/roofline
+quantifies the difference per mesh.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..kernels import ref
+
+
+def _local_spmm(rows, cols, vals, b, n_rows):
+    return ref.spmm_coo_ref(rows, cols, vals, b, n_rows)
+
+
+def spmm_shard_map(rows, cols, vals, b, *, n_rows: int, mesh, axis: str,
+                   mode: str = "nnz_rs"):
+    """rows/cols/vals: (nnz_pad,) padded COO (pad val=0); b: (K, N).
+
+    Sharding contract (enforced via shard_map in/out specs):
+      row:     triplets already row-partitioned; rows are *local* indices.
+      nnz_*:   triplets nnz-partitioned (any rows anywhere); rows global.
+    Returns out (n_rows, N) sharded over ``axis`` on rows (row/nnz_rs) or
+    replicated (nnz_ar).
+    """
+    axis_size = mesh.shape[axis]
+    if mode == "row":
+        assert n_rows % axis_size == 0
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P(axis),
+        )
+        def _row(r, c, v, bb):
+            return _local_spmm(r, c, v, bb, n_rows // axis_size)
+
+        return _row(rows, cols, vals, b)
+
+    if mode == "nnz_ar":
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P(),
+        )
+        def _ar(r, c, v, bb):
+            partial = _local_spmm(r, c, v, bb, n_rows)
+            return jax.lax.psum(partial, axis)  # atomic-style combine
+
+        return _ar(rows, cols, vals, b)
+
+    if mode == "nnz_rs":
+        assert n_rows % axis_size == 0
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P(axis),
+        )
+        def _rs(r, c, v, bb):
+            partial = _local_spmm(r, c, v, bb, n_rows)
+            # segment-style combine: each shard finalizes its row block
+            return jax.lax.psum_scatter(
+                partial, axis, scatter_dimension=0, tiled=True)
+
+        return _rs(rows, cols, vals, b)
+
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,232 @@
+"""Sparse matrix storage formats as JAX pytrees.
+
+Formats
+-------
+COO              (rows, cols, vals) unsorted triplets — interchange format.
+CSR              classic compressed-sparse-row — canonical logical format.
+GroupedCOO       row-sorted COO padded to a multiple of ``nnz_tile`` — the
+                 feed format of the nnz-split (EB) segment-group kernel.
+                 Padding uses ``val = 0`` so padded lanes are *zero
+                 extension* in the paper's sense: they flow through the
+                 vector/MXU datapath and contribute nothing.
+ELL              per-row padded (blocked-ELL when viewed in row tiles) —
+                 the feed format of the row-split (RB) kernel.
+
+All formats carry their dense ``shape`` and padding parameters as static
+metadata so they can cross ``jit`` boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["COO", "CSR", "GroupedCOO", "ELL", "round_up"]
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["rows", "cols", "vals"],
+    meta_fields=["shape"],
+)
+@dataclasses.dataclass(frozen=True)
+class COO:
+    """Unordered triplet format. ``shape`` is the dense (n_rows, n_cols)."""
+
+    rows: jax.Array  # (nnz,) int32
+    cols: jax.Array  # (nnz,) int32
+    vals: jax.Array  # (nnz,) float
+    shape: tuple
+
+    @property
+    def nnz(self) -> int:
+        return self.vals.shape[0]
+
+    def todense(self) -> jax.Array:
+        out = jnp.zeros(self.shape, self.vals.dtype)
+        return out.at[self.rows, self.cols].add(self.vals)
+
+    @staticmethod
+    def fromdense(mat) -> "COO":
+        mat = np.asarray(mat)
+        rows, cols = np.nonzero(mat)
+        order = np.lexsort((cols, rows))
+        return COO(
+            rows=jnp.asarray(rows[order], jnp.int32),
+            cols=jnp.asarray(cols[order], jnp.int32),
+            vals=jnp.asarray(mat[rows[order], cols[order]]),
+            shape=mat.shape,
+        )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["indptr", "indices", "vals"],
+    meta_fields=["shape"],
+)
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    indptr: jax.Array  # (n_rows + 1,) int32
+    indices: jax.Array  # (nnz,) int32 column ids
+    vals: jax.Array  # (nnz,)
+    shape: tuple
+
+    @property
+    def nnz(self) -> int:
+        return self.vals.shape[0]
+
+    def row_lengths(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def tocoo(self) -> COO:
+        n_rows = self.shape[0]
+        # expand indptr -> per-nnz row ids (format-time searchsorted: this
+        # replaces the paper's per-thread taco_binarySearchBefore).
+        rows = jnp.searchsorted(
+            self.indptr, jnp.arange(self.nnz, dtype=jnp.int32), side="right"
+        ).astype(jnp.int32) - 1
+        del n_rows
+        return COO(rows=rows, cols=self.indices, vals=self.vals, shape=self.shape)
+
+    def todense(self) -> jax.Array:
+        return self.tocoo().todense()
+
+    @staticmethod
+    def fromdense(mat) -> "CSR":
+        mat = np.asarray(mat)
+        n_rows = mat.shape[0]
+        indices_l, vals_l, indptr = [], [], [0]
+        for r in range(n_rows):
+            (cols,) = np.nonzero(mat[r])
+            indices_l.append(cols)
+            vals_l.append(mat[r, cols])
+            indptr.append(indptr[-1] + len(cols))
+        return CSR(
+            indptr=jnp.asarray(indptr, jnp.int32),
+            indices=jnp.asarray(np.concatenate(indices_l) if indices_l else [], jnp.int32),
+            vals=jnp.asarray(np.concatenate(vals_l) if vals_l else [], mat.dtype),
+            shape=mat.shape,
+        )
+
+    @staticmethod
+    def fromcoo(coo: COO) -> "CSR":
+        rows = np.asarray(coo.rows)
+        cols = np.asarray(coo.cols)
+        vals = np.asarray(coo.vals)
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        counts = np.bincount(rows, minlength=coo.shape[0])
+        indptr = np.concatenate([[0], np.cumsum(counts)])
+        return CSR(
+            indptr=jnp.asarray(indptr, jnp.int32),
+            indices=jnp.asarray(cols, jnp.int32),
+            vals=jnp.asarray(vals),
+            shape=coo.shape,
+        )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["rows", "cols", "vals"],
+    meta_fields=["shape", "nnz", "nnz_tile"],
+)
+@dataclasses.dataclass(frozen=True)
+class GroupedCOO:
+    """Row-sorted COO padded to a multiple of ``nnz_tile``.
+
+    Feed format for the nnz-split segment-group kernel: a grid cell owns one
+    ``nnz_tile`` slice; ``rows`` is the precomputed per-nnz row-id stream.
+    Padded lanes have ``val == 0`` and ``row == shape[0] - 1`` (zero
+    extension — they reduce into a live row but contribute nothing).
+    """
+
+    rows: jax.Array  # (nnz_padded,) int32, non-decreasing
+    cols: jax.Array  # (nnz_padded,) int32
+    vals: jax.Array  # (nnz_padded,)
+    shape: tuple
+    nnz: int  # true nnz (static)
+    nnz_tile: int
+
+    @property
+    def nnz_padded(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def num_tiles(self) -> int:
+        return self.nnz_padded // self.nnz_tile
+
+    @staticmethod
+    def fromcsr(csr: CSR, nnz_tile: int) -> "GroupedCOO":
+        coo = csr.tocoo()
+        nnz = csr.nnz
+        padded = max(round_up(max(nnz, 1), nnz_tile), nnz_tile)
+        pad = padded - nnz
+        pad_row = csr.shape[0] - 1
+        rows = jnp.concatenate(
+            [coo.rows, jnp.full((pad,), pad_row, jnp.int32)])
+        cols = jnp.concatenate([coo.cols, jnp.zeros((pad,), jnp.int32)])
+        vals = jnp.concatenate([coo.vals, jnp.zeros((pad,), coo.vals.dtype)])
+        return GroupedCOO(rows=rows, cols=cols, vals=vals, shape=csr.shape,
+                          nnz=nnz, nnz_tile=nnz_tile)
+
+    def todense(self) -> jax.Array:
+        out = jnp.zeros(self.shape, self.vals.dtype)
+        return out.at[self.rows, self.cols].add(self.vals)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["cols", "vals"],
+    meta_fields=["shape", "width"],
+)
+@dataclasses.dataclass(frozen=True)
+class ELL:
+    """Per-row padded format (rows also padded to a row-tile multiple by the
+    kernel wrapper). Feed format for the row-split kernel: a grid cell owns
+    ``ROW_TILE`` whole rows. Padding cols point at column 0 with val 0."""
+
+    cols: jax.Array  # (n_rows_padded, width) int32
+    vals: jax.Array  # (n_rows_padded, width)
+    shape: tuple
+    width: int
+
+    @property
+    def n_rows_padded(self) -> int:
+        return self.vals.shape[0]
+
+    @staticmethod
+    def fromcsr(csr: CSR, width: int | None = None, row_tile: int = 8) -> "ELL":
+        indptr = np.asarray(csr.indptr)
+        indices = np.asarray(csr.indices)
+        vals = np.asarray(csr.vals)
+        n_rows = csr.shape[0]
+        lengths = indptr[1:] - indptr[:-1]
+        w = int(lengths.max()) if len(lengths) and lengths.max() > 0 else 1
+        if width is not None:
+            if width < w:
+                raise ValueError(f"width {width} < max row length {w}")
+            w = width
+        w = max(w, 1)
+        n_pad = round_up(max(n_rows, 1), row_tile)
+        ecols = np.zeros((n_pad, w), np.int32)
+        evals = np.zeros((n_pad, w), vals.dtype if vals.size else np.float32)
+        for r in range(n_rows):
+            lo, hi = indptr[r], indptr[r + 1]
+            ecols[r, : hi - lo] = indices[lo:hi]
+            evals[r, : hi - lo] = vals[lo:hi]
+        return ELL(cols=jnp.asarray(ecols), vals=jnp.asarray(evals),
+                   shape=csr.shape, width=w)
+
+    def todense(self) -> jax.Array:
+        n_rows, _ = self.shape
+        rows = jnp.repeat(jnp.arange(self.n_rows_padded), self.width)
+        out = jnp.zeros((self.n_rows_padded, self.shape[1]), self.vals.dtype)
+        out = out.at[rows, self.cols.reshape(-1)].add(self.vals.reshape(-1))
+        return out[:n_rows]

@@ -1,0 +1,29 @@
+"""High-level sparse ops: schedule selection + kernel dispatch.
+
+``spmm(a, b)`` with ``schedule='auto'`` runs the data-aware selector
+(core/selector.py) on the matrix statistics — the paper's Table-5
+"dynamic choice" made a library default.
+"""
+from __future__ import annotations
+
+from ..core.atomic_parallelism import KernelSchedule
+from ..core.selector import select_schedule
+from ..kernels import ops as kops
+from .formats import CSR
+from .random import matrix_stats
+
+__all__ = ["spmm", "sddmm"]
+
+
+def spmm(a, b, schedule="auto", *, impl: str = "pallas",
+         interpret: bool = True):
+    if schedule == "auto":
+        if isinstance(a, CSR):
+            schedule = select_schedule(matrix_stats(a), int(b.shape[1]))
+        else:
+            schedule = KernelSchedule("eb")
+    return kops.spmm(a, b, schedule, impl=impl, interpret=interpret)
+
+
+def sddmm(rows, cols, a, b, scale=None, **kw):
+    return kops.sddmm(rows, cols, a, b, scale, **kw)

@@ -1,0 +1,77 @@
+"""Synthetic sparse matrix generators (uniform and power-law row lengths).
+
+The paper evaluates on the DA-SpMM matrix suite (SuiteSparse-derived).
+Offline we synthesize matrices with controlled statistics instead: density,
+row-length skew (CV), and size — the three features the data-aware selector
+conditions on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .formats import COO, CSR
+
+
+def random_csr(
+    n_rows: int,
+    n_cols: int,
+    density: float = 0.01,
+    skew: float = 0.0,
+    seed: int = 0,
+    dtype=np.float32,
+) -> CSR:
+    """Random CSR with expected ``density`` and row-length skew.
+
+    skew = 0.0 -> uniform Bernoulli rows; skew > 0 -> power-law row lengths
+    (a few very long rows), the regime where nnz-split + segment reduction
+    wins in the paper.
+    """
+    rng = np.random.default_rng(seed)
+    target_nnz = max(1, int(n_rows * n_cols * density))
+    if skew <= 0.0:
+        lengths = rng.multinomial(target_nnz, np.full(n_rows, 1.0 / n_rows))
+    else:
+        w = rng.pareto(1.0 / max(skew, 1e-3), size=n_rows) + 1e-6
+        w = w / w.sum()
+        lengths = rng.multinomial(target_nnz, w)
+    lengths = np.minimum(lengths, n_cols)
+
+    indptr = np.zeros(n_rows + 1, np.int64)
+    np.cumsum(lengths, out=indptr[1:])
+    nnz = int(indptr[-1])
+    indices = np.empty(nnz, np.int32)
+    for r in range(n_rows):
+        k = lengths[r]
+        if k:
+            indices[indptr[r]: indptr[r + 1]] = np.sort(
+                rng.choice(n_cols, size=k, replace=False)
+            )
+    vals = rng.standard_normal(nnz).astype(dtype)
+    import jax.numpy as jnp
+
+    return CSR(
+        indptr=jnp.asarray(indptr, jnp.int32),
+        indices=jnp.asarray(indices),
+        vals=jnp.asarray(vals),
+        shape=(n_rows, n_cols),
+    )
+
+
+def random_coo(n_rows, n_cols, density=0.01, skew=0.0, seed=0) -> COO:
+    return random_csr(n_rows, n_cols, density, skew, seed).tocoo()
+
+
+def matrix_stats(csr: CSR) -> dict:
+    """Features used by the data-aware schedule selector."""
+    lengths = np.asarray(csr.row_lengths())
+    mean = float(lengths.mean()) if lengths.size else 0.0
+    std = float(lengths.std()) if lengths.size else 0.0
+    return {
+        "n_rows": csr.shape[0],
+        "n_cols": csr.shape[1],
+        "nnz": csr.nnz,
+        "density": csr.nnz / max(1, csr.shape[0] * csr.shape[1]),
+        "row_mean": mean,
+        "row_cv": (std / mean) if mean > 0 else 0.0,
+        "row_max": int(lengths.max()) if lengths.size else 0,
+    }

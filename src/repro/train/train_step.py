@@ -1,0 +1,74 @@
+"""Training step assembly: loss -> grads -> optimizer, with optional
+gradient-accumulation microbatching and gradient compression.
+
+``TrainState`` is a plain NamedTuple pytree so jit/pjit shard it directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.collectives import compress_tree, decompress_tree
+from .optimizer import AdamState, AdamW
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamState
+
+
+def init_state(api, optimizer: AdamW, key) -> TrainState:
+    params = api.init(key)
+    return TrainState(params=params, opt=optimizer.init(params))
+
+
+def make_train_step(api, optimizer: AdamW, ctx=None, *,
+                    microbatches: int = 1, grad_compression: str | None = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 splits the batch on dim 0 and accumulates grads with
+    ``lax.scan`` (sequential — overlaps with the next microbatch's compute
+    under XLA latency hiding). grad_compression ∈ {None, 'bf16', 'int8'}
+    compresses gradients before the (XLA-inserted) data-parallel
+    all-reduce; see distributed/collectives.py.
+    """
+
+    loss_fn = functools.partial(api.loss, ctx=ctx)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                loss, g = grads_of(state.params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches) + x.shape[1:]),
+                batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                micro, (zero, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = loss_sum / microbatches
+        else:
+            loss, grads = grads_of(state.params, batch)
+
+        if grad_compression:
+            grads = decompress_tree(compress_tree(grads, grad_compression))
+
+        new_params, new_opt, gnorm = optimizer.update(
+            grads, state.opt, state.params)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   "step": new_opt.step}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step

@@ -1,0 +1,79 @@
+"""Training loop: jit'd step + checkpoint/restart + heartbeat/straggler
+hooks + elastic restart plan. Runs on any mesh (CPU tests use 1 device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..distributed.fault_tolerance import HeartbeatMonitor, make_elastic_plan
+from .optimizer import AdamW
+from .train_step import TrainState, init_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep_ckpts: int = 3
+    microbatches: int = 1
+    grad_compression: str | None = None
+
+
+class Trainer:
+    def __init__(self, api, optimizer: AdamW, data_iter, *,
+                 ckpt_dir, tcfg: TrainerConfig = TrainerConfig(),
+                 ctx=None, hosts=("host0",), host_index: int = 0):
+        self.api = api
+        self.optimizer = optimizer
+        self.data = data_iter
+        self.tcfg = tcfg
+        self.ckpt = CheckpointManager(ckpt_dir, keep=tcfg.keep_ckpts)
+        self.monitor = HeartbeatMonitor(hosts)
+        self.host = hosts[host_index]
+        self.step_fn = jax.jit(make_train_step(
+            api, optimizer, ctx, microbatches=tcfg.microbatches,
+            grad_compression=tcfg.grad_compression))
+        self.history: list[dict] = []
+
+    def init_or_restore(self, key) -> TrainState:
+        state = init_state(self.api, self.optimizer, key)
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state, step = self.ckpt.restore(state)
+            print(f"[trainer] restored checkpoint step {step}")
+        return state
+
+    def run(self, state: TrainState) -> TrainState:
+        t = self.tcfg
+        start = int(state.opt.step)
+        for step in range(start, t.total_steps):
+            batch = next(self.data)
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])  # also blocks until ready
+            dt = time.perf_counter() - t0
+            self.monitor.beat(self.host, dt)
+            self.history.append({"step": step + 1, "loss": loss,
+                                 "grad_norm": float(metrics["grad_norm"]),
+                                 "dt_s": dt})
+            if (step + 1) % t.log_every == 0:
+                print(f"[trainer] step {step + 1} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} {dt:.3f}s")
+            if (step + 1) % t.ckpt_every == 0:
+                self.ckpt.save(step + 1, state)
+            plan = make_elastic_plan(self.monitor, self.ckpt.all_steps(),
+                                     global_batch=batch["tokens"].shape[0])
+            if plan is not None:
+                print(f"[trainer] ELASTIC RESTART NEEDED: {plan.note}")
+                break
+        self.ckpt.wait()
+        return state
+
+    def losses(self) -> np.ndarray:
+        return np.asarray([h["loss"] for h in self.history])

@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) for the core invariants:
+
+1. segment_group_reduce == segment_sum for every group size / strategy
+   (ACCUMULATE, SEGMENT) on arbitrary non-decreasing segment ids.
+2. Atomic-parallelism legality rules match the paper's three rules.
+3. Sparse format round-trips preserve the dense matrix exactly.
+4. Zero extension: padding nnz with val=0 never changes SpMM output.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DA_SPMM_POINTS, AtomicParallelism, GroupReduceStrategy,
+                        enumerate_space, is_legal, segment_group_reduce,
+                        segment_sum_ref)
+from repro.core.atomic_parallelism import Fraction
+from repro.kernels import ref, spmm
+from repro.core.atomic_parallelism import KernelSchedule
+from repro.sparse import CSR, ELL, GroupedCOO, random_csr
+
+
+@st.composite
+def seg_problem(draw):
+    n_groups = draw(st.integers(1, 6))
+    g = draw(st.sampled_from([2, 4, 8, 16]))
+    t = n_groups * g
+    n_segs = draw(st.integers(1, 12))
+    ids = sorted(draw(st.lists(st.integers(0, n_segs - 1),
+                               min_size=t, max_size=t)))
+    c = draw(st.integers(1, 5))
+    seed = draw(st.integers(0, 2 ** 16))
+    return g, np.asarray(ids, np.int32), n_segs, c, seed
+
+
+@given(seg_problem())
+@settings(max_examples=40, deadline=None)
+def test_segment_group_reduce_equals_segment_sum(prob):
+    g, ids, n_segs, c, seed = prob
+    data = np.random.default_rng(seed).standard_normal(
+        (len(ids), c)).astype(np.float32)
+    want = np.asarray(segment_sum_ref(jnp.asarray(data), jnp.asarray(ids),
+                                      n_segs))
+    for strat in (GroupReduceStrategy.SEGMENT, GroupReduceStrategy.ACCUMULATE):
+        got = np.asarray(segment_group_reduce(
+            jnp.asarray(data), jnp.asarray(ids), n_segs, group_size=g,
+            strategy=strat))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.sampled_from(["nnz", "row"]),
+       st.sampled_from([Fraction(1, 32), Fraction(1, 8), Fraction(1),
+                        Fraction(8), Fraction(32)]),
+       st.sampled_from([1, 2, 4, 8]),
+       st.sampled_from([1, 2, 4, 8, 16, 32]))
+@settings(max_examples=60, deadline=None)
+def test_legality_rules(split, x, c, r):
+    p = AtomicParallelism(split, x, c, r)
+    legal = is_legal(p)
+    # Rule 1: fractional nnz illegal
+    if split == "nnz" and x < 1:
+        assert not legal
+    # Rule 2: row collaboration needs r >= g
+    if split == "row" and x < 1 and r < 1 / x:
+        assert not legal
+    if split == "nnz" and x >= 1:
+        assert legal
+    if split == "row" and (x >= 1 or r >= 1 / x):
+        assert legal
+
+
+def test_da_spmm_points_all_legal():
+    for name, p in DA_SPMM_POINTS.items():
+        assert is_legal(p), name
+
+
+def test_enumerate_space_nonempty_and_legal():
+    pts = enumerate_space()
+    assert len(pts) > 50
+    assert all(is_legal(p) for p in pts)
+
+
+@given(st.integers(8, 40), st.integers(8, 40),
+       st.floats(0.01, 0.3), st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_format_roundtrips(n_rows, n_cols, density, seed):
+    csr = random_csr(n_rows, n_cols, density=density, seed=seed)
+    dense = np.asarray(csr.todense())
+    np.testing.assert_array_equal(
+        np.asarray(GroupedCOO.fromcsr(csr, 16).todense()), dense)
+    np.testing.assert_array_equal(
+        np.asarray(ELL.fromcsr(csr).todense()), dense)
+    np.testing.assert_array_equal(
+        np.asarray(CSR.fromdense(dense).todense()), dense)
+
+
+@given(st.integers(0, 10 ** 6), st.sampled_from([16, 64, 256]))
+@settings(max_examples=10, deadline=None)
+def test_zero_extension_invariance(seed, nnz_tile):
+    """Padding the nnz stream (val=0) must never change the result —
+    the paper's zero-extension legality argument."""
+    csr = random_csr(40, 30, density=0.05, seed=seed)
+    b = np.random.default_rng(seed).standard_normal((30, 8)).astype(np.float32)
+    coo = csr.tocoo()
+    want = np.asarray(ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals,
+                                       jnp.asarray(b), 40))
+    for tile in (nnz_tile, 2 * nnz_tile):
+        got = np.asarray(spmm(
+            csr, jnp.asarray(b),
+            KernelSchedule("eb", nnz_tile=tile, col_tile=8, group_size=8)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rule3_unrepresentable():
+    with pytest.raises(ValueError):
+        AtomicParallelism("row", Fraction(1, 4), 0, 8)

@@ -1,0 +1,41 @@
+"""The runnable examples must actually run (subprocess, quick settings)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(script, *args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_quickstart():
+    assert "done" in _run("quickstart.py")
+
+
+@pytest.mark.slow
+def test_gcn_spmm():
+    assert "gcn_spmm complete" in _run("gcn_spmm.py")
+
+
+@pytest.mark.slow
+def test_serve_lm():
+    assert "serve_lm complete" in _run("serve_lm.py")
+
+
+@pytest.mark.slow
+def test_train_lm_quick():
+    out = _run("train_lm.py", "--steps", "25", "--batch", "4",
+               "--seq", "128")
+    assert "train_lm complete" in out

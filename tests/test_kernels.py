@@ -1,0 +1,153 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (ref.py).
+
+Sweeps shapes, dtypes, schedules (nnz_tile/row_tile/col_tile/group_size)
+and strategies, per the paper's tuning axes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GroupReduceStrategy, KernelSchedule, segment_group_reduce
+from repro.kernels import grouped_matmul, ref, sddmm, segment_reduce, spmm
+from repro.kernels.ops import expert_tile_map
+from repro.sparse import random_csr
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _want_spmm(csr, b):
+    return np.asarray(spmm(csr, b, impl="ref"))
+
+
+@pytest.mark.parametrize("density,skew", [(0.02, 0.0), (0.05, 1.5), (0.001, 0.0)])
+@pytest.mark.parametrize(
+    "sched",
+    [
+        KernelSchedule("eb", nnz_tile=64, col_tile=8, group_size=8),
+        KernelSchedule("eb", nnz_tile=64, col_tile=16, group_size=64),
+        KernelSchedule("eb", nnz_tile=128, col_tile=8, group_size=16),
+        KernelSchedule("eb", nnz_tile=64, col_tile=8, group_size=32,
+                       strategy="accumulate"),
+    ],
+)
+def test_spmm_eb_schedule_sweep(density, skew, sched):
+    csr = random_csr(200, 150, density=density, skew=skew, seed=3)
+    b = jax.random.normal(jax.random.PRNGKey(0), (150, 37))
+    got = np.asarray(spmm(csr, b, sched))
+    np.testing.assert_allclose(got, _want_spmm(csr, b), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("n_rows,n_cols,n_dense", [(100, 80, 20), (64, 64, 8), (33, 70, 130)])
+@pytest.mark.parametrize("row_tile", [4, 8, 16])
+def test_spmm_rb_shape_sweep(n_rows, n_cols, n_dense, row_tile):
+    csr = random_csr(n_rows, n_cols, density=0.05, seed=7)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n_cols, n_dense))
+    sched = KernelSchedule("rb", row_tile=row_tile, col_tile=8)
+    got = np.asarray(spmm(csr, b, sched))
+    np.testing.assert_allclose(got, _want_spmm(csr, b), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_dtypes(dtype):
+    csr = random_csr(96, 96, density=0.03, seed=11)
+    csr = type(csr)(indptr=csr.indptr, indices=csr.indices,
+                    vals=csr.vals.astype(dtype), shape=csr.shape)
+    b = jax.random.normal(jax.random.PRNGKey(2), (96, 16)).astype(dtype)
+    tol = 2e-2 if dtype == jnp.bfloat16 else RTOL
+    got = np.asarray(spmm(csr, b, KernelSchedule("eb", nnz_tile=64,
+                                                 col_tile=8, group_size=8)))
+    np.testing.assert_allclose(got, _want_spmm(csr, b), rtol=tol, atol=tol)
+
+
+def test_spmm_empty_rows_and_single_tile():
+    # matrix with many empty rows, nnz < one tile
+    csr = random_csr(50, 40, density=0.002, seed=13)
+    b = jax.random.normal(jax.random.PRNGKey(3), (40, 4))
+    got = np.asarray(spmm(csr, b, KernelSchedule("eb", nnz_tile=64,
+                                                 col_tile=8, group_size=8)))
+    np.testing.assert_allclose(got, _want_spmm(csr, b), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("d", [16, 33, 128])
+def test_sddmm(d):
+    csr = random_csr(100, 80, density=0.05, seed=5)
+    coo = csr.tocoo()
+    a = jax.random.normal(jax.random.PRNGKey(2), (100, d))
+    b = jax.random.normal(jax.random.PRNGKey(3), (80, d))
+    want = np.asarray(ref.sddmm_ref(coo.rows, coo.cols, a, b))
+    got = np.asarray(sddmm(coo.rows, coo.cols, a, b, nnz_tile=64))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sddmm_with_scale():
+    csr = random_csr(60, 60, density=0.05, seed=6)
+    coo = csr.tocoo()
+    a = jax.random.normal(jax.random.PRNGKey(4), (60, 24))
+    b = jax.random.normal(jax.random.PRNGKey(5), (60, 24))
+    want = np.asarray(ref.sddmm_ref(coo.rows, coo.cols, a, b, coo.vals))
+    got = np.asarray(sddmm(coo.rows, coo.cols, a, b, coo.vals, nnz_tile=64))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("group_size", [8, 16, 32, 64])
+@pytest.mark.parametrize("strategy", ["segment", "accumulate"])
+def test_segment_reduce_kernel(group_size, strategy):
+    T, C, S = 256, 16, 40
+    rng = np.random.default_rng(0)
+    seg = np.sort(rng.integers(0, S, T)).astype(np.int32)
+    data = rng.standard_normal((T, C)).astype(np.float32)
+    want = np.asarray(ref.segment_reduce_ref(jnp.asarray(data),
+                                             jnp.asarray(seg), S))
+    got = np.asarray(
+        segment_reduce(jnp.asarray(seg), jnp.asarray(data), num_segments=S,
+                       tile=max(64, group_size), group_size=group_size,
+                       strategy=strategy))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("group_size", [2, 4, 8, 16, 32])
+def test_segment_group_reduce_spec_matches_segment_sum(group_size):
+    T, C, S = 128, 8, 50
+    rng = np.random.default_rng(1)
+    seg = np.sort(rng.integers(0, S, T)).astype(np.int32)
+    data = rng.standard_normal((T, C)).astype(np.float32)
+    want = np.asarray(ref.segment_reduce_ref(jnp.asarray(data), jnp.asarray(seg), S))
+    got = np.asarray(segment_group_reduce(
+        jnp.asarray(data), jnp.asarray(seg), S, group_size=group_size,
+        strategy=GroupReduceStrategy.SEGMENT))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_segment_group_parallel_contract():
+    """PARALLEL strategy: groups whose lanes share one segment reduce
+    exactly; the contract holds when seg ids are constant per group."""
+    G, n_groups, C = 8, 6, 4
+    seg = np.repeat(np.arange(n_groups), G).astype(np.int32)
+    data = np.random.default_rng(2).standard_normal((G * n_groups, C)).astype(np.float32)
+    got = np.asarray(segment_group_reduce(
+        jnp.asarray(data), jnp.asarray(seg), n_groups, group_size=G,
+        strategy=GroupReduceStrategy.PARALLEL))
+    want = data.reshape(n_groups, G, C).sum(1)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("gs", [[40, 0, 70, 17], [1, 1, 1, 1], [0, 0, 128, 0]])
+def test_grouped_matmul(gs):
+    E, D, F, TT = 4, 64, 96, 32
+    gs = np.asarray(gs)
+    tiles = expert_tile_map(gs, TT)
+    if len(tiles) == 0:
+        pytest.skip("no tokens")
+    t_pad = len(tiles) * TT
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((t_pad, D)).astype(np.float32)
+    eids = np.repeat(tiles, TT)
+    w = rng.standard_normal((E, D, F)).astype(np.float32)
+    want = np.asarray(ref.grouped_matmul_ref(jnp.asarray(x), jnp.asarray(eids),
+                                             jnp.asarray(w)))
+    got = np.asarray(grouped_matmul(jnp.asarray(x), jnp.asarray(tiles),
+                                    jnp.asarray(w), token_tile=TT,
+                                    f_tile=32, d_tile=32))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

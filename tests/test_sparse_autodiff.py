@@ -1,0 +1,55 @@
+"""Differentiable SpMM: custom-vjp (SDDMM backward) vs dense autodiff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparse import random_csr
+from repro.sparse.autodiff import make_spmm
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_spmm_grads_match_dense(impl):
+    csr = random_csr(24, 20, density=0.1, seed=0)
+    coo = csr.tocoo()
+    n_rows, n_cols = csr.shape
+    b = jax.random.normal(jax.random.PRNGKey(0), (n_cols, 6))
+    vals = coo.vals
+
+    spmm_fn = make_spmm(coo.rows, coo.cols, n_rows, n_cols, impl=impl)
+    tgt = jax.random.normal(jax.random.PRNGKey(1), (n_rows, 6))
+
+    def loss_sparse(vals, b):
+        return jnp.sum((spmm_fn(vals, b) - tgt) ** 2)
+
+    def loss_dense(vals, b):
+        dense = jnp.zeros((n_rows, n_cols)).at[coo.rows, coo.cols].set(vals)
+        return jnp.sum((dense @ b - tgt) ** 2)
+
+    l1, (dv1, db1) = jax.value_and_grad(loss_sparse, argnums=(0, 1))(vals, b)
+    l2, (dv2, db2) = jax.value_and_grad(loss_dense, argnums=(0, 1))(vals, b)
+    assert abs(float(l1) - float(l2)) < 1e-3
+    np.testing.assert_allclose(np.asarray(dv1), np.asarray(dv2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(db1), np.asarray(db2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gcn_layer_trains_through_sparse():
+    """One GCN aggregation layer optimized end-to-end via the sparse vjp."""
+    csr = random_csr(16, 16, density=0.2, seed=3)
+    coo = csr.tocoo()
+    spmm_fn = make_spmm(coo.rows, coo.cols, 16, 16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    y = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    w = jnp.zeros((8, 4))
+
+    def loss(w):
+        return jnp.mean((spmm_fn(coo.vals, x @ w) - y) ** 2)
+
+    g = jax.grad(loss)
+    losses = []
+    for _ in range(25):
+        w = w - 0.1 * g(w)
+        losses.append(float(loss(w)))
+    assert losses[-1] < losses[0] * 0.9

@@ -1,0 +1,198 @@
+"""Substrate tests: optimizer, checkpoint manager, fault tolerance, data
+pipeline, gradient compression.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.synthetic import ShardedTokenStream
+from repro.distributed.collectives import compress_tree, decompress_tree
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               make_elastic_plan, plan_remesh)
+from repro.train.optimizer import AdamW, cosine_schedule, global_norm
+
+
+# ------------------------------------------------------------- optimizer
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    target = jnp.asarray([1.0, 2.0])
+    for _ in range(300):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = opt.update(grads, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_grad_clipping():
+    opt = AdamW(lr=0.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, gnorm = opt.update({"w": jnp.asarray([3.0, 4.0, 0.0])}, state,
+                             params)
+    assert abs(float(gnorm) - 5.0) < 1e-5
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.asarray(100))) < 2e-4
+    assert float(lr(jnp.asarray(5))) == pytest.approx(5e-4)
+
+
+def test_global_norm():
+    assert float(global_norm({"a": jnp.asarray([3.0]),
+                              "b": jnp.asarray([4.0])})) == pytest.approx(5.0)
+
+
+# ------------------------------------------------------------ compression
+
+
+@pytest.mark.parametrize("method", ["bf16", "int8"])
+def test_grad_compression_roundtrip(method):
+    tree = {"a": jnp.asarray(np.random.default_rng(0).standard_normal(64),
+                             jnp.float32) * 0.01,
+            "b": {"c": jnp.ones((4, 4)) * 2.5}}
+    out = decompress_tree(compress_tree(tree, method))
+    tol = 1e-2 if method == "bf16" else 5e-2
+    for k in ("a",):
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(tree[k]),
+                                   rtol=tol, atol=tol * 0.01)
+
+
+# ------------------------------------------------------------- checkpoint
+
+
+def _tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    tree = _tree()
+    mgr.save(100, tree)
+    restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 100
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert int(restored["step"]) == 7
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree())
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_integrity_detection(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(5, _tree())
+    # corrupt a payload file
+    victim = next((tmp_path / "step_00000005").glob("arr_*.npy"))
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="checksum"):
+        mgr.restore(_tree())
+
+
+def test_checkpoint_restore_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    t = _tree()
+    mgr.save(1, t)
+    mgr.save(9, jax.tree.map(lambda x: x + 1, t))
+    restored, step = mgr.restore(t)
+    assert step == 9
+    assert int(restored["step"]) == 8
+
+
+# -------------------------------------------------------- fault tolerance
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_dead_host():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10, clock=clk)
+    mon.beat("h0", 1.0)
+    mon.beat("h1", 1.0)
+    clk.t = 5.0
+    assert mon.dead_hosts() == []
+    clk.t = 11.0
+    mon.beat("h0", 1.0)
+    assert mon.dead_hosts() == ["h1"]
+
+
+def test_straggler_detection():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["h0", "h1", "h2"], straggler_factor=1.5,
+                           patience=3, clock=clk)
+    for step in range(5):
+        clk.t += 1
+        mon.beat("h0", 1.0)
+        mon.beat("h1", 1.0)
+        mon.beat("h2", 3.0)  # consistently 3x slower
+        mon.poll()
+    assert mon.stragglers() == ["h2"]
+
+
+def test_plan_remesh_and_elastic():
+    assert plan_remesh(128, 4, 16) == (32, 16)
+    assert plan_remesh(100, 4, 16) == (16, 16)  # power-of-two dp
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10, clock=clk)
+    mon.beat("h0", 1.0)
+    clk.t = 20.0
+    mon.beat("h0", 1.0)
+    plan = make_elastic_plan(mon, [100, 200], global_batch=256,
+                             chips_per_host=4, model_parallel=2)
+    assert plan is not None
+    assert plan.restore_step == 200
+    assert plan.mesh_shape == (2, 2)
+    assert "h1" in plan.note
+
+
+def test_no_plan_when_healthy():
+    mon = HeartbeatMonitor(["h0"], clock=time.monotonic)
+    mon.beat("h0", 1.0)
+    assert make_elastic_plan(mon, [1], global_batch=8) is None
+
+
+# --------------------------------------------------------------- data
+
+
+def test_sharded_stream_disjoint_and_deterministic():
+    a = ShardedTokenStream(100, 16, 8, host_index=0, host_count=2, seed=3)
+    b = ShardedTokenStream(100, 16, 8, host_index=1, host_count=2, seed=3)
+    ba, bb = next(a), next(b)
+    assert ba["tokens"].shape == (4, 16)
+    assert not np.array_equal(ba["tokens"], bb["tokens"])
+    a2 = ShardedTokenStream(100, 16, 8, host_index=0, host_count=2, seed=3)
+    np.testing.assert_array_equal(next(a2)["tokens"], ba["tokens"])
+
+
+def test_stream_checkpoint_restore():
+    a = ShardedTokenStream(50, 8, 4, seed=1)
+    next(a)
+    st = a.state()
+    x = next(a)
+    b = ShardedTokenStream(50, 8, 4, seed=1)
+    b.restore(st)
+    np.testing.assert_array_equal(next(b)["tokens"], x["tokens"])
