@@ -17,7 +17,6 @@ import numpy as np
 
 from repro.core import GroupReduceStrategy, segment_group_reduce
 from repro.kernels import ref
-from repro.sparse import ELL, GroupedCOO
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 7) -> float:
@@ -40,17 +39,17 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 7) -> float:
 
 def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
                    nnz_tile: int = 256):
-    g = GroupedCOO.fromcsr(csr, max(nnz_tile, group_size))
+    g = csr.grouped(max(nnz_tile, group_size))
     n_rows = csr.shape[0]
-    strat = GroupReduceStrategy(strategy)
 
     def run(rows, cols, vals, b):
         partial = vals[:, None].astype(jnp.float32) * jnp.take(
             b.astype(jnp.float32), cols, axis=0)
-        if strat == GroupReduceStrategy.ACCUMULATE:
+        if strategy == GroupReduceStrategy.ACCUMULATE.value:
             return jax.ops.segment_sum(partial, rows, num_segments=n_rows)
+        # any registered strategy name dispatches through the registry
         return segment_group_reduce(partial, rows, n_rows,
-                                    group_size=group_size, strategy=strat)
+                                    group_size=group_size, strategy=strategy)
 
     fn = jax.jit(run)
     args = (g.rows, g.cols, g.vals,
@@ -60,7 +59,7 @@ def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
 
 def make_rb_runner(csr, n_dense, *, row_tile: int = 8,
                    width: int | None = None):
-    ell = ELL.fromcsr(csr, width=width, row_tile=row_tile)
+    ell = csr.ell(row_tile=row_tile, width=width)
     n_rows = csr.shape[0]
 
     def run(ecols, evals, b):

@@ -104,7 +104,7 @@ def table3_new_vs_original(quick=True):
     matrices), which a serial machine does reflect.
     """
     from repro.core.selector import predict_cost
-    from repro.core import KernelSchedule
+    from repro.core import Schedule
     from repro.sparse.random import matrix_stats
 
     rows = []
@@ -113,10 +113,10 @@ def table3_new_vs_original(quick=True):
         model_sps, wall_sps = [], []
         for (m, n, d, s), csr in mats:
             stats = matrix_stats(csr)
-            orig = [KernelSchedule("eb", group_size=32,
+            orig = [Schedule("eb", group_size=32,
                                    strategy="accumulate"),
-                    KernelSchedule("rb")]
-            new = [KernelSchedule("eb", group_size=g, strategy="segment")
+                    Schedule("rb")]
+            new = [Schedule("eb", group_size=g, strategy="segment")
                    for g in (4, 8, 16, 32)]
             c_orig = min(predict_cost(stats, sc, n_dense) for sc in orig)
             c_new = min(predict_cost(stats, sc, n_dense) for sc in new)
@@ -145,7 +145,7 @@ def table4_tuning(quick=True):
     -> <G, nnz/row tile, col tile>) vs the library-default schedule, under
     the parallel cost model AND CPU wall clock over the same grid."""
     from repro.core.selector import predict_cost
-    from repro.core import KernelSchedule
+    from repro.core import Schedule
     from repro.sparse.random import matrix_stats
 
     rows = []
@@ -155,7 +155,7 @@ def table4_tuning(quick=True):
         model_sps, wall_sps, best_names = [], [], []
         for (m, n, d, s), csr in mats:
             stats = matrix_stats(csr)
-            default = KernelSchedule("eb", group_size=32,
+            default = Schedule("eb", group_size=32,
                                      strategy="segment", nnz_tile=256,
                                      col_tile=max(8, min(128, n_dense)))
             c_def = predict_cost(stats, default, n_dense)

@@ -1,9 +1,13 @@
 """2-layer GCN on a synthetic graph with the Sgap SpMM at its core —
 the paper's own motivating workload family (GNN aggregation).
 
-Aggregation Ã·X runs through the segment-group SpMM (auto-selected
-schedule); training uses plain jax.grad through the ref path (the Pallas
-kernel is validated against it elsewhere).
+Aggregation Ã·X runs through the unified ``repro.sparse.spmm`` API with an
+auto-selected :class:`Schedule`: the forward executes the scheduled Pallas
+segment-group kernel, and the backward closes the paper's algebra family
+on itself (dvals = SDDMM(dOut, X), dX = Ãᵀ·dOut) via the built-in custom
+VJP, so the training loop differentiates through the same kernels it
+serves with.  Feed-format conversion happens once (per-(format, tile)
+cache on CSR), not per step.
 
     PYTHONPATH=src python examples/gcn_spmm.py
 """
@@ -12,11 +16,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import select_schedule
-from repro.kernels import ref
-from repro.sparse import CSR, random_csr
-from repro.sparse.ops import spmm
-from repro.sparse.random import matrix_stats
+from repro.sparse import CSR, Schedule, matrix_stats, random_csr, spmm
 
 N_NODES, N_FEAT, N_CLASS = 256, 32, 4
 
@@ -28,9 +28,8 @@ np.fill_diagonal(dense, 1.0)
 deg = dense.sum(1)
 norm = dense / np.sqrt(np.outer(deg, deg))
 A = CSR.fromdense(norm)
-coo = A.tocoo()
 
-sched = select_schedule(matrix_stats(A), N_FEAT)
+sched = Schedule.auto(matrix_stats(A), N_FEAT)
 print(f"selected aggregation schedule: {sched}")
 
 rng = np.random.default_rng(0)
@@ -46,12 +45,10 @@ params = {
 
 
 def gcn_fwd(params, x):
-    # layer 1: Ã X W1  (aggregation = the paper's SpMM)
-    h = ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, x @ params["w1"],
-                         N_NODES)
+    # layer 1: Ã X W1  (aggregation = the paper's SpMM, scheduled kernel)
+    h = spmm(A, x @ params["w1"], schedule=sched)
     h = jax.nn.relu(h)
-    h = ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, h @ params["w2"],
-                         N_NODES)
+    h = spmm(A, h @ params["w2"], schedule=sched)
     return h
 
 
@@ -60,13 +57,13 @@ def loss_fn(params, x, y):
     return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(N_NODES), y])
 
 
-# sanity: the Pallas segment-group kernel agrees with the training path
+# sanity: the scheduled Pallas kernel agrees with the pure-jnp oracle
 h0 = feats @ params["w1"]
 np.testing.assert_allclose(
-    np.asarray(spmm(A, h0, sched)),
-    np.asarray(ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, h0, N_NODES)),
+    np.asarray(spmm(A, h0, schedule=sched)),
+    np.asarray(spmm(A, h0, impl="ref")),
     rtol=1e-4, atol=1e-4)
-print("pallas aggregation matches training path ✓")
+print("pallas aggregation matches oracle ✓")
 
 step = jax.jit(jax.value_and_grad(loss_fn))
 lr = 0.5

@@ -1,42 +1,71 @@
-"""Quickstart: the Sgap segment-group SpMM in 30 lines.
+"""Quickstart: the Sgap segment-group SpMM through the unified Schedule API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
-from repro.core import KernelSchedule, select_schedule
-from repro.sparse import random_csr
-from repro.sparse.ops import spmm
-from repro.sparse.random import matrix_stats
+from repro.sparse import (Schedule, matrix_stats, random_csr,
+                          register_strategy, segment_reduce, spmm)
 
 # A skewed sparse matrix (a few very long rows) — the regime where the
 # paper's flexible reduction wins.
 A = random_csr(512, 512, density=0.02, skew=1.5, seed=0)
 B = jax.random.normal(jax.random.PRNGKey(0), (512, 8))
 
-# 1. Let the data-aware selector pick a schedule (paper Table 5 made a
-#    library default).
+# 1. schedule='auto' runs the data-aware selector (paper Table 5 made a
+#    library default) and checks against the pure-jnp oracle.
 stats = matrix_stats(A)
-sched = select_schedule(stats, n_dense_cols=B.shape[1])
 print(f"matrix: {stats['nnz']} nnz, row CV {stats['row_cv']:.2f}")
-print(f"selected schedule: {sched}")
-
-# 2. Run the Pallas segment-group kernel (interpret mode on CPU) and check
-#    against the pure-jnp oracle.
-out = spmm(A, B, sched)
+print(f"auto schedule: {Schedule.auto(stats, B.shape[1])}")
+out = spmm(A, B, schedule="auto")
 ref = spmm(A, B, impl="ref")
 np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
                            atol=1e-4)
-print("kernel matches oracle ✓")
+print("auto schedule matches oracle ✓")
 
-# 3. Try explicit atomic-parallelism points {<1 nnz, c col>, r}.
+# 2. The four DA-SpMM points are named schedules; explicit Schedule objects
+#    expose every tile / group-size / strategy knob.
+for name in ("EB+PR", "EB+SR", "RB+PR", "RB+SR"):
+    out_n = spmm(A, B, schedule=name)
+    np.testing.assert_allclose(np.asarray(out_n), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    print(f"{name}: OK")
 for r in (8, 32):
-    s = KernelSchedule("eb", nnz_tile=256, col_tile=8, group_size=r,
-                       strategy="segment")
-    out_r = spmm(A, B, s)
+    s = Schedule("eb", nnz_tile=256, col_tile=8, group_size=r,
+                 strategy="segment")
+    out_r = spmm(A, B, schedule=s)
     np.testing.assert_allclose(np.asarray(out_r), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)
     print(f"group size r={r}: OK")
+
+# 3. User-defined reduction strategy (paper challenge 2): register a pure-
+#    JAX spec + in-kernel realization once; every op dispatches through it.
+def _spec(partials, seg_ids, num_segments, group_size):
+    onehot = (seg_ids[:, None]
+              == jnp.arange(num_segments)[None, :]).astype(partials.dtype)
+    return jnp.einsum("ts,tc->sc", onehot, partials)
+
+
+def _pallas(rows, partial, out_ref, group_size):
+    s = out_ref.shape[0]
+    onehot = (rows[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (rows.shape[0], s), 1)).astype(partial.dtype)
+    out_ref[...] += jnp.dot(onehot.T, partial,
+                            preferred_element_type=jnp.float32)
+
+
+register_strategy("onehot-tile", _spec, _pallas, overwrite=True)
+seg = jnp.asarray(np.sort(np.random.default_rng(0).integers(0, 40, 200)),
+                  jnp.int32)
+data = jax.random.normal(jax.random.PRNGKey(1), (200, 8))
+got = segment_reduce(seg, data, 40,
+                     schedule=Schedule("eb", nnz_tile=64, group_size=32,
+                                       strategy="onehot-tile"))
+want = jax.ops.segment_sum(data, seg, num_segments=40)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                           atol=1e-4)
+print("custom strategy through the kernel: OK")
 print("done")

@@ -1,5 +1,6 @@
-"""Sgap core: atomic parallelism (design space) + segment group (schedule
-abstraction + executable reduction spec)."""
+"""Sgap core: atomic parallelism (design space), segment group (executable
+reduction spec) and the unified Schedule API + reduction-strategy registry
+(DESIGN.md §3)."""
 from .atomic_parallelism import (  # noqa: F401
     DA_SPMM_POINTS,
     AtomicParallelism,
@@ -7,6 +8,15 @@ from .atomic_parallelism import (  # noqa: F401
     enumerate_space,
     is_legal,
     to_schedule,
+)
+from .schedule import (  # noqa: F401
+    ReductionStrategy,
+    Schedule,
+    as_schedule,
+    attach_pallas_impl,
+    available_strategies,
+    get_strategy,
+    register_strategy,
 )
 from .segment_group import (  # noqa: F401
     GroupReduceStrategy,

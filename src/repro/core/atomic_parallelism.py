@@ -19,8 +19,10 @@ Legality rules (paper §3.3, Fig. 8):
 3. ``<1/g row, 1/c col>`` is illegal: resource parallelism may multiply
    only one element of the atomic parallelism.
 
-The mapping to TPU kernel schedules is in :func:`to_schedule` — see
-DESIGN.md §2/§3 for the semantics of each field on TPU.
+The mapping to TPU kernel schedules lives in
+:meth:`repro.core.schedule.Schedule.from_point` — see DESIGN.md §2/§3 for
+the semantics of each field on TPU; :func:`to_schedule` is kept as a thin
+compatibility wrapper.
 
 DA-SpMM's space embeds as:
     EB+PR = {<1 nnz, c col>, 32}     EB+SR = {<32 nnz, c col>, 1}
@@ -33,6 +35,8 @@ import itertools
 from fractions import Fraction
 from typing import Iterable, List
 
+from .schedule import Schedule
+
 __all__ = [
     "AtomicParallelism",
     "KernelSchedule",
@@ -43,6 +47,11 @@ __all__ = [
 ]
 
 REDUCTION_PARALLELISMS = (1, 2, 4, 8, 16, 32)
+
+# Deprecated alias: the stringly-typed KernelSchedule was folded into the
+# unified Schedule object (DESIGN.md §3); the constructor signature is
+# unchanged, so existing call sites keep working.
+KernelSchedule = Schedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,73 +117,14 @@ DA_SPMM_POINTS = {
 }
 
 
-@dataclasses.dataclass(frozen=True)
-class KernelSchedule:
-    """TPU-side realization of an atomic-parallelism point.
-
-    kernel      'eb' (nnz-split, segment strategy) or 'rb' (row-split,
-                parallel strategy).
-    nnz_tile    nnz per grid cell ('eb').
-    row_tile    rows per grid cell ('rb').
-    col_tile    dense columns per grid cell (coarsen × lane width).
-    group_size  segment-group width G — sub-tile one-hot reduce width
-                ('eb'); vestigial for 'rb' (single writeback per row).
-    strategy    'segment' | 'parallel' | 'accumulate'.
-    """
-
-    kernel: str
-    nnz_tile: int = 256
-    row_tile: int = 8
-    col_tile: int = 128
-    group_size: int = 32
-    strategy: str = "segment"
-
-    def __post_init__(self):
-        if self.kernel not in ("eb", "rb"):
-            raise ValueError(self.kernel)
-        if self.strategy not in ("segment", "parallel", "accumulate"):
-            raise ValueError(self.strategy)
-        if self.kernel == "eb" and self.nnz_tile % self.group_size != 0:
-            raise ValueError("nnz_tile must be a multiple of group_size")
-
-
 def to_schedule(
     p: AtomicParallelism,
     *,
     lane_width: int = 128,
     base_nnz_tile: int = 256,
     base_row_tile: int = 8,
-) -> KernelSchedule:
-    """Map a design-space point to a concrete TPU kernel schedule.
-
-    GPU threads disappear on TPU; what survives is (a) how much sparse work
-    a grid cell owns, (b) the reduction granularity G inside the cell, and
-    (c) the dense-column tile. ``x = g nnz`` scales the nnz tile; ``x = 1/g
-    row`` means g-wide collaboration on a row, which on TPU is simply the
-    row-split kernel (whole rows per cell, MXU does the intra-row
-    reduction). ``r`` becomes the segment-group width for nnz-split.
-    """
-    col_tile = max(lane_width, p.c * lane_width // 4)
-    if p.split == "nnz":
-        g = int(p.x) if p.x >= 1 else 1
-        nnz_tile = base_nnz_tile * max(1, g // 8)
-        group = p.r if p.r > 1 else min(32, nnz_tile)
-        strategy = "segment" if p.r > 1 else "accumulate"
-        # group must divide nnz_tile
-        while nnz_tile % group:
-            group //= 2
-        return KernelSchedule(
-            kernel="eb", nnz_tile=nnz_tile, col_tile=col_tile,
-            group_size=max(group, 1), strategy=strategy,
-        )
-    else:
-        if p.x >= 1:
-            row_tile = base_row_tile * int(p.x)
-        else:
-            # 1/g row: g-wide collaboration -> narrower row tile, wider
-            # reduce; on TPU both land in the same row-split kernel.
-            row_tile = base_row_tile
-        return KernelSchedule(
-            kernel="rb", row_tile=row_tile, col_tile=col_tile,
-            group_size=p.r, strategy="parallel",
-        )
+) -> Schedule:
+    """Deprecated: use :meth:`Schedule.from_point`."""
+    return Schedule.from_point(p, lane_width=lane_width,
+                               base_nnz_tile=base_nnz_tile,
+                               base_row_tile=base_row_tile)

@@ -1,0 +1,311 @@
+"""Unified scheduling API — one user-facing `Schedule` object (DESIGN.md §3).
+
+The paper's two contributions — changeable group size (challenge 1) and
+user-defined reduction strategy (challenge 2) — used to be spread over
+three overlapping types: ``AtomicParallelism`` (design-space point),
+``KernelSchedule`` (kernel tiles + a stringly-typed strategy) and
+``SegmentGroup`` (the schedule handle, never threaded into dispatch).
+This module collapses them:
+
+* :class:`Schedule` is the single handle every public op accepts
+  (``repro.sparse.spmm/sddmm/segment_reduce`` take ``schedule=``).  It is
+  constructible from every existing entry point:
+
+  - ``Schedule.from_point(p)``    — an :class:`AtomicParallelism` point
+    (the mapping that used to live in ``to_schedule``);
+  - ``Schedule.named("EB+PR")``   — the four DA-SpMM points;
+  - ``Schedule.auto(stats, n)``   — the data-aware selector;
+  - ``Schedule.from_group(sg)``   — a :class:`SegmentGroup`;
+  - :func:`as_schedule` coerces any of the above (or a name string).
+
+* the **reduction-strategy registry** makes the paper's "user-defined
+  reduction strategy" first-class: a strategy is a name plus
+
+  - ``spec_fn(partials, seg_ids, num_segments, group_size)`` — the
+    pure-JAX executable specification (the oracle), and
+  - ``pallas_fn(rows, partial, out_ref, group_size)`` — the in-kernel
+    realization (optional; kernels fall back to running the spec on the
+    tile and accumulating the result).
+
+  SEGMENT / PARALLEL / ACCUMULATE are registered built-ins; both the spec
+  dispatcher (``core.segment_group.segment_group_reduce``) and the Pallas
+  dispatcher (``kernels.common.group_reduce_scatter``) go through this
+  registry, so a strategy registered once runs everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from .segment_group import (
+    GroupReduceStrategy,
+    SegmentGroup,
+    spec_accumulate,
+    spec_parallel,
+    spec_segment,
+)
+
+__all__ = [
+    "ReductionStrategy",
+    "Schedule",
+    "as_schedule",
+    "attach_pallas_impl",
+    "available_strategies",
+    "get_strategy",
+    "register_strategy",
+    "strategy_name",
+]
+
+
+# ---------------------------------------------------------------------------
+# Reduction-strategy registry (paper challenge 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionStrategy:
+    """A named reduction strategy.
+
+    ``spec_fn(partials, seg_ids, num_segments, group_size) -> (S, C)``
+        pure-JAX executable specification; serves as the oracle for any
+        kernel realization of this strategy.
+    ``pallas_fn(rows, partial, out_ref, group_size) -> None``
+        in-kernel realization reducing ``partial`` (T, C) by ``rows`` (T,)
+        into ``out_ref`` (S, C).  ``None`` means kernels run the spec on
+        the tile and accumulate the result (correct, not tuned).
+    """
+
+    name: str
+    spec_fn: Callable
+    pallas_fn: Optional[Callable] = None
+    builtin: bool = False
+
+
+_REGISTRY: Dict[str, ReductionStrategy] = {}
+
+
+def strategy_name(strategy) -> str:
+    """Canonical registry name for an enum / string / entry handle."""
+    if isinstance(strategy, GroupReduceStrategy):
+        return strategy.value
+    if isinstance(strategy, ReductionStrategy):
+        return strategy.name
+    return str(strategy)
+
+
+def register_strategy(name: str, spec_fn: Callable,
+                      pallas_fn: Optional[Callable] = None, *,
+                      overwrite: bool = False) -> ReductionStrategy:
+    """Register a user-defined reduction strategy under ``name``.
+
+    Returns the registry entry.  Re-registering an existing name requires
+    ``overwrite=True`` (note: jit caches keyed on the old entry are not
+    invalidated; use a fresh name when iterating interactively).
+    """
+    name = strategy_name(name)
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"strategy {name!r} already registered "
+            f"(available: {sorted(_REGISTRY)}); pass overwrite=True")
+    entry = ReductionStrategy(name=name, spec_fn=spec_fn,
+                              pallas_fn=pallas_fn)
+    _REGISTRY[name] = entry
+    return entry
+
+
+def attach_pallas_impl(name: str, pallas_fn: Callable) -> ReductionStrategy:
+    """Attach (or replace) the in-kernel realization of a registered
+    strategy — used by ``kernels.common`` to supply the built-in Pallas
+    implementations without a core -> kernels import."""
+    entry = get_strategy(name)
+    entry = dataclasses.replace(entry, pallas_fn=pallas_fn)
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get_strategy(strategy) -> ReductionStrategy:
+    name = strategy_name(strategy)
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown reduction strategy {name!r}; "
+            f"available: {sorted(_REGISTRY)} "
+            f"(register new ones with repro.core.register_strategy)"
+        ) from None
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _register_builtins() -> None:
+    for name, spec in (("segment", spec_segment),
+                       ("parallel", spec_parallel),
+                       ("accumulate", spec_accumulate)):
+        _REGISTRY[name] = ReductionStrategy(name=name, spec_fn=spec,
+                                            builtin=True)
+
+
+_register_builtins()
+
+
+# ---------------------------------------------------------------------------
+# The unified Schedule object
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """TPU realization of a scheduling decision (DESIGN.md §3).
+
+    kernel      'eb' (nnz-split) or 'rb' (row-split).
+    nnz_tile    nnz per grid cell ('eb'); also the tile of the standalone
+                ``segment_reduce`` kernel.
+    row_tile    rows per grid cell ('rb').
+    col_tile    dense columns per grid cell (coarsen × lane width).
+    group_size  segment-group width G — sub-tile reduce width ('eb');
+                vestigial for 'rb' (single writeback per row).
+    strategy    name of a registered reduction strategy ('segment',
+                'parallel', 'accumulate', or user-registered).
+    """
+
+    kernel: str = "eb"
+    nnz_tile: int = 256
+    row_tile: int = 8
+    col_tile: int = 128
+    group_size: int = 32
+    strategy: str = "segment"
+
+    def __post_init__(self):
+        if self.kernel not in ("eb", "rb"):
+            raise ValueError(f"kernel must be 'eb' or 'rb', got {self.kernel}")
+        object.__setattr__(self, "strategy", strategy_name(self.strategy))
+        get_strategy(self.strategy)  # raises on unregistered names
+        if self.kernel == "eb" and self.nnz_tile % self.group_size != 0:
+            raise ValueError("nnz_tile must be a multiple of group_size")
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_point(cls, p, *, lane_width: int = 128, base_nnz_tile: int = 256,
+                   base_row_tile: int = 8) -> "Schedule":
+        """Map an :class:`AtomicParallelism` point ``{<x split, c col>, r}``
+        to a concrete TPU schedule (DESIGN.md §2).
+
+        GPU threads disappear on TPU; what survives is (a) how much sparse
+        work a grid cell owns, (b) the reduction granularity G inside the
+        cell, and (c) the dense-column tile.  ``x = g nnz`` scales the nnz
+        tile; ``x = 1/g row`` means g-wide collaboration on a row, which on
+        TPU is simply the row-split kernel (whole rows per cell, MXU does
+        the intra-row reduction).  ``r`` becomes the segment-group width
+        for nnz-split.
+        """
+        col_tile = max(lane_width, p.c * lane_width // 4)
+        if p.split == "nnz":
+            g = int(p.x) if p.x >= 1 else 1
+            nnz_tile = base_nnz_tile * max(1, g // 8)
+            group = p.r if p.r > 1 else min(32, nnz_tile)
+            strategy = "segment" if p.r > 1 else "accumulate"
+            # group must divide nnz_tile
+            while nnz_tile % group:
+                group //= 2
+            return cls(kernel="eb", nnz_tile=nnz_tile, col_tile=col_tile,
+                       group_size=max(group, 1), strategy=strategy)
+        if p.x >= 1:
+            row_tile = base_row_tile * int(p.x)
+        else:
+            # 1/g row: g-wide collaboration -> narrower row tile, wider
+            # reduce; on TPU both land in the same row-split kernel.
+            row_tile = base_row_tile
+        return cls(kernel="rb", row_tile=row_tile, col_tile=col_tile,
+                   group_size=p.r, strategy="parallel")
+
+    @classmethod
+    def named(cls, name: str, **kw) -> "Schedule":
+        """One of the four DA-SpMM points: 'EB+PR', 'EB+SR', 'RB+PR',
+        'RB+SR' (paper §3.3)."""
+        from .atomic_parallelism import DA_SPMM_POINTS
+
+        try:
+            point = DA_SPMM_POINTS[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown schedule name {name!r}; "
+                f"known: {sorted(DA_SPMM_POINTS)}") from None
+        return cls.from_point(point, **kw)
+
+    @classmethod
+    def auto(cls, stats: dict, n_dense_cols: int) -> "Schedule":
+        """Data-aware selection (the paper's Table-5 dynamic choice) from
+        matrix statistics — see ``core.selector``."""
+        from .selector import select_schedule
+
+        return select_schedule(stats, n_dense_cols)
+
+    @classmethod
+    def from_group(cls, group: SegmentGroup, **kw) -> "Schedule":
+        """Lift a :class:`SegmentGroup` (group width + strategy) into a
+        full schedule; tiling fields come from ``**kw`` or defaults."""
+        strategy = strategy_name(group.strategy)
+        kw.setdefault("kernel", "eb")
+        if kw["kernel"] == "eb":
+            nnz_tile = kw.get("nnz_tile", Schedule.nnz_tile)
+            if nnz_tile % group.group_size:
+                kw["nnz_tile"] = _lcm_tile(nnz_tile, group.group_size)
+        return cls(group_size=group.group_size, strategy=strategy, **kw)
+
+    # -- views -------------------------------------------------------------
+
+    @property
+    def segment_group(self) -> SegmentGroup:
+        """The reduction half of this schedule (round-trips through
+        :meth:`from_group`)."""
+        return SegmentGroup(group_size=self.group_size, strategy=self.strategy)
+
+    def replace(self, **kw) -> "Schedule":
+        return dataclasses.replace(self, **kw)
+
+    def __str__(self):
+        tile = (f"nnz_tile={self.nnz_tile}" if self.kernel == "eb"
+                else f"row_tile={self.row_tile}")
+        return (f"Schedule({self.kernel}, {tile}, col_tile={self.col_tile}, "
+                f"G={self.group_size}, strategy={self.strategy})")
+
+
+def _lcm_tile(tile: int, group: int) -> int:
+    import math
+
+    return tile * group // math.gcd(tile, group)
+
+
+def as_schedule(s, *, stats: dict | None = None,
+                n_dense_cols: int | None = None) -> Schedule:
+    """Coerce any schedule-like value into a :class:`Schedule`.
+
+    Accepts ``None`` (library default), a :class:`Schedule`, a DA-SpMM name
+    ('EB+PR', ...), 'auto' (requires ``stats`` and ``n_dense_cols``), an
+    :class:`AtomicParallelism` point, or a :class:`SegmentGroup`.
+    """
+    if s is None:
+        return Schedule()
+    if isinstance(s, Schedule):
+        return s
+    if isinstance(s, SegmentGroup):
+        return Schedule.from_group(s)
+    if isinstance(s, str):
+        if s == "auto":
+            if stats is None or n_dense_cols is None:
+                raise ValueError(
+                    "'auto' needs matrix statistics: pass stats= and "
+                    "n_dense_cols= to as_schedule, or use an op that "
+                    "derives them (repro.sparse.spmm)")
+            return Schedule.auto(stats, n_dense_cols)
+        return Schedule.named(s)
+    from .atomic_parallelism import AtomicParallelism
+
+    if isinstance(s, AtomicParallelism):
+        return Schedule.from_point(s)
+    raise TypeError(
+        f"cannot interpret {type(s).__name__} as a Schedule; expected "
+        "Schedule | SegmentGroup | AtomicParallelism | name | 'auto'")

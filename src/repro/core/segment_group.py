@@ -6,7 +6,8 @@ A *segment group* separates the two roles the GPU warp used to conflate:
 * synchronization    -> on TPU: the width-G one-hot reduce inside a tile
   semantics             plus the writeback strategy.
 
-``GroupReduceStrategy``:
+Built-in strategies (each a registered :class:`~.schedule.ReductionStrategy`;
+users add their own with ``repro.core.register_strategy``):
 
 SEGMENT     multiple writeback lanes per group, decided at runtime by the
             segment ids (the paper's segment reduction). TPU realization:
@@ -20,9 +21,12 @@ ACCUMULATE  no intra-group combine; every lane writes back with ``+=``
             because the TPU grid is sequential; across cores it becomes a
             psum. Used as the correctness fallback.
 
-This module is the *pure-JAX executable specification* of the semantics;
-``repro.kernels.segment_reduce`` / ``spmm_eb`` are the Pallas realizations
-and are tested against this spec.
+The ``spec_*`` functions here are the *pure-JAX executable specification*
+of each strategy — the oracle any kernel realization is tested against.
+``segment_group_reduce`` dispatches through the strategy registry
+(``core.schedule``), so user-registered strategies run through the same
+spec path; ``repro.kernels.common.group_reduce_scatter`` is the Pallas
+dispatcher over the same registry.
 """
 from __future__ import annotations
 
@@ -38,6 +42,9 @@ __all__ = [
     "SegmentGroup",
     "segment_group_reduce",
     "segment_sum_ref",
+    "spec_accumulate",
+    "spec_parallel",
+    "spec_segment",
     "group_writeback_counts",
     "group_waste_fraction",
 ]
@@ -51,16 +58,24 @@ class GroupReduceStrategy(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class SegmentGroup:
-    """User-facing schedule handle: ``parallelize(j, GPUGroup, r, strategy)``
+    """User-facing reduction handle: ``parallelize(j, GPUGroup, r, strategy)``
     in the paper's CIN becomes ``SegmentGroup(group_size=r, strategy=...)``
-    here."""
+    here.  ``strategy`` is a :class:`GroupReduceStrategy` or the name of
+    any registered strategy; lift into a full :class:`~.schedule.Schedule`
+    with ``Schedule.from_group``."""
 
     group_size: int = 32
-    strategy: GroupReduceStrategy = GroupReduceStrategy.SEGMENT
+    strategy: "GroupReduceStrategy | str" = GroupReduceStrategy.SEGMENT
 
     def __post_init__(self):
         if self.group_size < 1:
             raise ValueError("group_size must be >= 1")
+        if isinstance(self.strategy, str):
+            try:
+                object.__setattr__(self, "strategy",
+                                   GroupReduceStrategy(self.strategy))
+            except ValueError:
+                pass  # user-registered strategy: keep the name
 
 
 def segment_sum_ref(partials: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
@@ -68,45 +83,48 @@ def segment_sum_ref(partials: jax.Array, seg_ids: jax.Array, num_segments: int) 
     return jax.ops.segment_sum(partials, seg_ids, num_segments=num_segments)
 
 
-@partial(jax.jit, static_argnames=("num_segments", "group_size", "strategy"))
-def segment_group_reduce(
-    partials: jax.Array,  # (T, C) per-lane partial results
-    seg_ids: jax.Array,  # (T,) int32 non-decreasing segment ids
-    num_segments: int,
-    group_size: int = 32,
-    strategy: GroupReduceStrategy = GroupReduceStrategy.SEGMENT,
-) -> jax.Array:
-    """Executable spec of grouped reduction with explicit group structure.
+# ---------------------------------------------------------------------------
+# Per-strategy executable specs.  Common signature (the registry contract):
+#     spec(partials (T, C), seg_ids (T,), num_segments, group_size) -> (S, C)
+# ---------------------------------------------------------------------------
 
-    Mathematically equals ``segment_sum`` for SEGMENT/ACCUMULATE; PARALLEL
-    additionally *asserts* (by construction) the single-writeback contract:
-    every lane in a group must share the group's first segment id — lanes
-    violating it are dropped, mirroring the GPU kernel where they would
-    simply never be accumulated by the one writeback thread.
-    """
+
+def spec_accumulate(partials, seg_ids, num_segments, group_size):
+    """ACCUMULATE: no intra-group combine; per-lane '+=' writeback."""
+    del group_size
+    return segment_sum_ref(partials, seg_ids, num_segments)
+
+
+def spec_parallel(partials, seg_ids, num_segments, group_size):
+    """PARALLEL: one writeback lane per group.  *Asserts* (by construction)
+    the single-writeback contract: every lane in a group must share the
+    group's first segment id — lanes violating it are dropped, mirroring
+    the GPU kernel where they would simply never be accumulated by the one
+    writeback thread."""
     T, C = partials.shape
     G = group_size
-    if T % G:
-        raise ValueError(f"T={T} not a multiple of group_size={G}")
     n_groups = T // G
     gp = partials.reshape(n_groups, G, C)
     gs = seg_ids.reshape(n_groups, G)
+    leader = gs[:, :1]  # single writeback segment per group
+    mask = (gs == leader).astype(partials.dtype)[..., None]
+    group_tot = jnp.sum(gp * mask, axis=1)  # (n_groups, C)
+    return jax.ops.segment_sum(group_tot, leader[:, 0],
+                               num_segments=num_segments)
 
-    if strategy == GroupReduceStrategy.ACCUMULATE:
-        return segment_sum_ref(partials, seg_ids, num_segments)
 
-    if strategy == GroupReduceStrategy.PARALLEL:
-        leader = gs[:, :1]  # single writeback segment per group
-        mask = (gs == leader).astype(partials.dtype)[..., None]
-        group_tot = jnp.sum(gp * mask, axis=1)  # (n_groups, C)
-        return jax.ops.segment_sum(group_tot, leader[:, 0], num_segments=num_segments)
-
-    # SEGMENT: per-group one-hot reduce (what the Pallas kernel does on the
-    # MXU), then cross-group carry accumulation. Local segment ids are
-    # offsets from the group's first segment, clamped into [0, G): with
-    # non-decreasing seg_ids a group of G lanes spans at most G distinct
-    # segments, but sparse matrices can skip ids, so lanes whose offset
-    # overflows the local window fall back to accumulate-writeback.
+def spec_segment(partials, seg_ids, num_segments, group_size):
+    """SEGMENT: per-group one-hot reduce (what the Pallas kernel does on
+    the MXU), then cross-group carry accumulation.  Local segment ids are
+    offsets from the group's first segment, clamped into [0, G): with
+    non-decreasing seg_ids a group of G lanes spans at most G distinct
+    segments, but sparse matrices can skip ids, so lanes whose offset
+    overflows the local window fall back to accumulate-writeback."""
+    T, C = partials.shape
+    G = group_size
+    n_groups = T // G
+    gp = partials.reshape(n_groups, G, C)
+    gs = seg_ids.reshape(n_groups, G)
     first = gs[:, :1]
     local = gs - first  # (n_groups, G) >= 0
     in_window = local < G
@@ -127,6 +145,37 @@ def segment_group_reduce(
         num_segments=num_segments,
     )
     return out + ov
+
+
+@partial(jax.jit, static_argnames=("num_segments", "group_size", "entry"))
+def _dispatch_spec(partials, seg_ids, *, num_segments, group_size, entry):
+    return entry.spec_fn(partials, seg_ids, num_segments, group_size)
+
+
+def segment_group_reduce(
+    partials: jax.Array,  # (T, C) per-lane partial results
+    seg_ids: jax.Array,  # (T,) int32 non-decreasing segment ids
+    num_segments: int,
+    group_size: int = 32,
+    strategy: "GroupReduceStrategy | str" = GroupReduceStrategy.SEGMENT,
+) -> jax.Array:
+    """Executable spec of grouped reduction with explicit group structure.
+
+    ``strategy`` may be a :class:`GroupReduceStrategy`, the name of any
+    registered strategy, or a registry entry; dispatch goes through the
+    strategy registry, so user strategies registered with
+    ``repro.core.register_strategy`` run here unchanged.  Mathematically
+    equals ``segment_sum`` for SEGMENT/ACCUMULATE; see the per-strategy
+    ``spec_*`` docstrings for the contracts.
+    """
+    from .schedule import get_strategy
+
+    T = partials.shape[0]
+    if T % group_size:
+        raise ValueError(f"T={T} not a multiple of group_size={group_size}")
+    entry = get_strategy(strategy)
+    return _dispatch_spec(partials, seg_ids, num_segments=num_segments,
+                          group_size=group_size, entry=entry)
 
 
 def group_writeback_counts(seg_ids, group_size: int):

@@ -19,13 +19,13 @@ from __future__ import annotations
 import math
 from typing import Dict
 
-from .atomic_parallelism import KernelSchedule
+from .schedule import Schedule
 from .segment_group import group_waste_fraction
 
 __all__ = ["select_schedule", "predict_cost", "candidate_schedules"]
 
 
-def candidate_schedules(n_dense_cols: int) -> list[KernelSchedule]:
+def candidate_schedules(n_dense_cols: int) -> list[Schedule]:
     """The tuning grid from the paper's dgSPARSE experiment, TPU-mapped:
     <groupSz, blockSz, tileSz, workerDimR> -> <G, nnz/row tile, col tile>."""
     cands = []
@@ -34,16 +34,16 @@ def candidate_schedules(n_dense_cols: int) -> list[KernelSchedule]:
         for nnz_tile in (128, 256, 512):
             if nnz_tile % g:
                 continue
-            cands.append(KernelSchedule("eb", nnz_tile=nnz_tile,
-                                        col_tile=col_tile, group_size=g,
-                                        strategy="segment"))
+            cands.append(Schedule("eb", nnz_tile=nnz_tile,
+                                  col_tile=col_tile, group_size=g,
+                                  strategy="segment"))
     for row_tile in (8, 16, 32):
-        cands.append(KernelSchedule("rb", row_tile=row_tile,
-                                    col_tile=col_tile, strategy="parallel"))
+        cands.append(Schedule("rb", row_tile=row_tile,
+                              col_tile=col_tile, strategy="parallel"))
     return cands
 
 
-def predict_cost(stats: Dict, sched: KernelSchedule, n_dense_cols: int) -> float:
+def predict_cost(stats: Dict, sched: Schedule, n_dense_cols: int) -> float:
     """Relative cost model (lower = better). Terms:
 
     work        nnz * C multiply-adds (same for every schedule);
@@ -76,7 +76,7 @@ def predict_cost(stats: Dict, sched: KernelSchedule, n_dense_cols: int) -> float
     return work + waste + 2.0 * writeback + 0.25 * gather
 
 
-def select_schedule(stats: Dict, n_dense_cols: int) -> KernelSchedule:
+def select_schedule(stats: Dict, n_dense_cols: int) -> Schedule:
     """Pick the argmin of the cost model over the candidate grid, with the
     paper's qualitative rules as a prior (they also act as tie-breakers)."""
     cands = candidate_schedules(n_dense_cols)

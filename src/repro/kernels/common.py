@@ -1,6 +1,13 @@
 """Shared in-kernel building blocks for the segment-group kernels.
 
-``group_reduce_scatter`` is the TPU realization of the paper's segment
+``group_reduce_scatter`` is the Pallas dispatcher over the reduction-
+strategy registry (``repro.core.schedule``): it looks up the strategy by
+name and runs its in-kernel realization.  The built-in realizations live
+here and are attached to the registry at import time; a user strategy
+registered with only a pure-JAX spec falls back to running that spec on
+the whole tile and accumulating the result (correct, not tuned).
+
+The built-in 'segment' realization is the TPU form of the paper's segment
 group (DESIGN.md §2): within each width-G group it
 
 1. finds segment runs (boundary cumsum — replaces the GPU's runtime
@@ -23,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.schedule import attach_pallas_impl, get_strategy
+
 
 def _rmw_row(out_ref, row, delta):
     """out_ref[row, :] += delta  (delta shape (1, C)), dynamic row index."""
@@ -30,35 +39,38 @@ def _rmw_row(out_ref, row, delta):
     out_ref[idx] = out_ref[idx] + delta
 
 
-def group_reduce_scatter(rows, partial, out_ref, group_size: int,
-                         strategy: str = "segment"):
-    """Reduce ``partial`` (T, C) by ``rows`` (T,) into ``out_ref`` (R, C).
+# ---------------------------------------------------------------------------
+# Built-in in-kernel realizations.  Registry contract:
+#     pallas_fn(rows (T,), partial (T, C), out_ref (R, C), group_size)
+# ---------------------------------------------------------------------------
 
-    ``rows`` need not be globally sorted; sorted input minimizes writebacks
-    (each unsorted transition opens a new run — correct, just more RMWs),
-    which is exactly the paper's "writeback thread decided at runtime".
-    """
+
+def _pallas_accumulate(rows, partial, out_ref, group_size: int):
+    T, _ = partial.shape
+    del group_size
+
+    def lane_body(t, _):
+        _rmw_row(out_ref, rows[t], partial[t][None, :])
+        return 0
+
+    jax.lax.fori_loop(0, T, lane_body, 0)
+
+
+def _pallas_parallel(rows, partial, out_ref, group_size: int):
     T, C = partial.shape
     G = group_size
-    assert T % G == 0, (T, G)
-    n_groups = T // G
 
-    if strategy == "accumulate":
-        def lane_body(t, _):
-            _rmw_row(out_ref, rows[t], partial[t][None, :])
-            return 0
-        jax.lax.fori_loop(0, T, lane_body, 0)
-        return
+    def par_body(n, _):
+        p = jax.lax.dynamic_slice(partial, (n * G, 0), (G, C))
+        _rmw_row(out_ref, rows[n * G], jnp.sum(p, axis=0)[None, :])
+        return 0
 
-    if strategy == "parallel":
-        def par_body(n, _):
-            p = jax.lax.dynamic_slice(partial, (n * G, 0), (G, C))
-            _rmw_row(out_ref, rows[n * G], jnp.sum(p, axis=0)[None, :])
-            return 0
-        jax.lax.fori_loop(0, n_groups, par_body, 0)
-        return
+    jax.lax.fori_loop(0, T // G, par_body, 0)
 
-    assert strategy == "segment", strategy
+
+def _pallas_segment(rows, partial, out_ref, group_size: int):
+    T, C = partial.shape
+    G = group_size
 
     def group_body(n, _):
         r = jax.lax.dynamic_slice(rows, (n * G,), (G,))
@@ -89,4 +101,36 @@ def group_reduce_scatter(rows, partial, out_ref, group_size: int,
         jax.lax.fori_loop(0, G, slot_body, 0)
         return 0
 
-    jax.lax.fori_loop(0, n_groups, group_body, 0)
+    jax.lax.fori_loop(0, T // G, group_body, 0)
+
+
+def spec_fallback_pallas(spec_fn):
+    """Bridge a pure-JAX strategy spec into the in-kernel contract: run the
+    spec over the whole tile (num_segments = the output block height) and
+    accumulate.  Correct for any spec; no per-group tuning."""
+
+    def pallas_fn(rows, partial, out_ref, group_size: int):
+        out_ref[...] += spec_fn(partial, rows, out_ref.shape[0], group_size)
+
+    return pallas_fn
+
+
+def group_reduce_scatter(rows, partial, out_ref, group_size: int,
+                         strategy: str = "segment"):
+    """Reduce ``partial`` (T, C) by ``rows`` (T,) into ``out_ref`` (R, C)
+    with the registered strategy named ``strategy``.
+
+    ``rows`` need not be globally sorted; sorted input minimizes writebacks
+    (each unsorted transition opens a new run — correct, just more RMWs),
+    which is exactly the paper's "writeback thread decided at runtime".
+    """
+    T, _ = partial.shape
+    assert T % group_size == 0, (T, group_size)
+    entry = get_strategy(strategy)
+    fn = entry.pallas_fn or spec_fallback_pallas(entry.spec_fn)
+    fn(rows, partial, out_ref, group_size)
+
+
+attach_pallas_impl("accumulate", _pallas_accumulate)
+attach_pallas_impl("parallel", _pallas_parallel)
+attach_pallas_impl("segment", _pallas_segment)

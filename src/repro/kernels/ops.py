@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.atomic_parallelism import KernelSchedule
+from ..core.schedule import Schedule
 from ..sparse.formats import CSR, ELL, GroupedCOO, round_up
 from . import ref
 from .sddmm import sddmm as _sddmm_kernel
@@ -25,7 +25,7 @@ def _pad_cols(b, col_tile):
     return b, n
 
 
-def vmem_footprint_eb(k, n_rows, sched: KernelSchedule, itemsize=4) -> int:
+def vmem_footprint_eb(k, n_rows, sched: Schedule, itemsize=4) -> int:
     """Working set the EB kernel claims per grid cell (see spmm_eb.py)."""
     return itemsize * (
         k * sched.col_tile            # B block
@@ -35,15 +35,16 @@ def vmem_footprint_eb(k, n_rows, sched: KernelSchedule, itemsize=4) -> int:
     )
 
 
-def spmm(a, b, schedule: KernelSchedule | None = None, *,
+def spmm(a, b, schedule: Schedule | None = None, *,
          impl: str = "pallas", interpret: bool = True):
     """out = A @ B for sparse A (CSR / GroupedCOO / ELL) and dense B.
 
     impl='ref' runs the pure-jnp oracle; impl='pallas' runs the kernel the
-    schedule selects (eb -> GroupedCOO path, rb -> ELL path).
+    schedule selects (eb -> GroupedCOO path, rb -> ELL path).  CSR inputs
+    convert through the per-(format, tile) cache on CSR.
     """
     if schedule is None:
-        schedule = KernelSchedule("eb")
+        schedule = Schedule("eb")
 
     if impl == "ref":
         if isinstance(a, GroupedCOO):
@@ -60,7 +61,7 @@ def spmm(a, b, schedule: KernelSchedule | None = None, *,
 
     if schedule.kernel == "eb":
         if isinstance(a, CSR):
-            a = GroupedCOO.fromcsr(a, schedule.nnz_tile)
+            a = a.grouped(schedule.nnz_tile)
         assert isinstance(a, GroupedCOO), type(a)
         if a.nnz_tile != schedule.nnz_tile:
             a = _regroup(a, schedule.nnz_tile)
@@ -73,7 +74,7 @@ def spmm(a, b, schedule: KernelSchedule | None = None, *,
 
     # rb path
     if isinstance(a, CSR):
-        a = ELL.fromcsr(a, row_tile=schedule.row_tile)
+        a = a.ell(row_tile=schedule.row_tile)
     assert isinstance(a, ELL), type(a)
     r_pad = round_up(a.n_rows_padded, schedule.row_tile)
     ecols, evals = a.cols, a.vals

@@ -4,6 +4,11 @@ The paper's ``segReduceWarp<T, G>`` macro instruction (Sgap §5.3) as a
 first-class Pallas kernel: the same group machinery as ``spmm_eb`` minus
 the gather/multiply front-end. Used directly by the SSD chunk combine and
 as the microbenchmark target for Table 1/2.
+
+Ragged inputs are zero-extended here (the same padding glue ``spmm`` has):
+``seg_ids`` is padded with ``num_segments - 1`` and ``data`` with zero
+rows up to the next ``tile`` multiple, so padded lanes reduce into a live
+segment but contribute nothing.
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..sparse.formats import round_up
 from .common import group_reduce_scatter
 
 
@@ -34,10 +40,20 @@ def _segred_kernel(seg_ref, data_ref, out_ref, *, group_size, strategy):
 def segment_reduce(seg_ids, data, *, num_segments: int, tile: int = 256,
                    group_size: int = 32, strategy: str = "segment",
                    interpret: bool = True):
-    """seg_ids: (T_pad,) non-decreasing (padding -> num_segments - 1 with
-    zero data rows); data: (T_pad, C)."""
-    t_pad, c = data.shape
-    assert t_pad % tile == 0
+    """seg_ids: (T,) non-decreasing; data: (T, C).  T may be ragged — both
+    inputs are zero-extended to the next ``tile`` multiple (padding lanes
+    target segment ``num_segments - 1`` with zero data).  ``strategy`` is
+    the name of any registered reduction strategy."""
+    if tile % group_size:
+        raise ValueError(f"tile={tile} not a multiple of "
+                         f"group_size={group_size}")
+    t, c = data.shape
+    t_pad = round_up(max(t, 1), tile)
+    if t_pad != t:
+        pad = t_pad - t
+        seg_ids = jnp.concatenate(
+            [seg_ids, jnp.full((pad,), num_segments - 1, seg_ids.dtype)])
+        data = jnp.concatenate([data, jnp.zeros((pad, c), data.dtype)])
     grid = (1, t_pad // tile)
     kernel = functools.partial(
         _segred_kernel, group_size=group_size, strategy=strategy)

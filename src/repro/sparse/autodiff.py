@@ -26,12 +26,13 @@ def make_spmm(rows, cols, n_rows: int, n_cols: int, *, impl: str = "ref",
 
     def _fwd_impl(vals, b):
         if impl == "pallas":
-            from ..core.atomic_parallelism import KernelSchedule
+            from ..core.schedule import Schedule, as_schedule
             from ..kernels.ops import spmm as kspmm
             from .formats import GroupedCOO
 
-            sched = schedule or KernelSchedule("eb", nnz_tile=64,
-                                               col_tile=8, group_size=8)
+            sched = (as_schedule(schedule) if schedule is not None
+                     else Schedule("eb", nnz_tile=64, col_tile=8,
+                                   group_size=8))
             g = GroupedCOO(rows=rows, cols=cols, vals=vals,
                            shape=(n_rows, n_cols), nnz=vals.shape[0],
                            nnz_tile=vals.shape[0])

@@ -14,6 +14,12 @@ ELL              per-row padded (blocked-ELL when viewed in row tiles) —
 
 All formats carry their dense ``shape`` and padding parameters as static
 metadata so they can cross ``jit`` boundaries.
+
+``CSR`` memoizes its kernel-feed conversions per ``(format, tile)`` —
+``csr.grouped(nnz_tile)`` / ``csr.ell(row_tile)`` / ``csr.tocoo()`` — so
+training loops that call ``spmm`` on the same matrix every step don't
+re-convert.  The cache only engages on concrete (non-traced) arrays; it is
+deliberately not part of the pytree, so transformed copies start cold.
 """
 from __future__ import annotations
 
@@ -29,6 +35,17 @@ __all__ = ["COO", "CSR", "GroupedCOO", "ELL", "round_up"]
 
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _csr_scatter_index(indptr):
+    """(row_ids, positions) int arrays: nnz t of CSR row r lands in ELL
+    slot ``t - indptr[r]``.  Shared by ``ELL.fromcsr`` and
+    ``CSR.ell_scatter_index``."""
+    indptr = np.asarray(indptr).astype(np.int64)
+    lengths = indptr[1:] - indptr[:-1]
+    row_ids = np.repeat(np.arange(lengths.shape[0]), lengths)
+    pos = np.arange(indptr[-1]) - np.repeat(indptr[:-1], lengths)
+    return row_ids, pos
 
 
 @partial(
@@ -85,15 +102,63 @@ class CSR:
     def row_lengths(self) -> jax.Array:
         return self.indptr[1:] - self.indptr[:-1]
 
-    def tocoo(self) -> COO:
-        n_rows = self.shape[0]
+    # -- conversion caching ------------------------------------------------
+
+    def _cache(self):
+        """Per-instance conversion memo, or None while being traced
+        (caching tracers would leak them across jit traces)."""
+        if any(isinstance(x, jax.core.Tracer)
+               for x in (self.indptr, self.indices, self.vals)):
+            return None
+        cache = self.__dict__.get("_convcache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_convcache", cache)
+        return cache
+
+    def _cached(self, key, build):
+        cache = self._cache()
+        if cache is None:
+            return build()
+        if key not in cache:
+            cache[key] = build()
+        return cache[key]
+
+    def tocoo(self) -> "COO":
         # expand indptr -> per-nnz row ids (format-time searchsorted: this
         # replaces the paper's per-thread taco_binarySearchBefore).
-        rows = jnp.searchsorted(
-            self.indptr, jnp.arange(self.nnz, dtype=jnp.int32), side="right"
-        ).astype(jnp.int32) - 1
-        del n_rows
-        return COO(rows=rows, cols=self.indices, vals=self.vals, shape=self.shape)
+        def build():
+            rows = jnp.searchsorted(
+                self.indptr, jnp.arange(self.nnz, dtype=jnp.int32),
+                side="right",
+            ).astype(jnp.int32) - 1
+            return COO(rows=rows, cols=self.indices, vals=self.vals,
+                       shape=self.shape)
+
+        return self._cached("coo", build)
+
+    def grouped(self, nnz_tile: int) -> "GroupedCOO":
+        """EB-kernel feed format, memoized per nnz_tile."""
+        return self._cached(("grouped", nnz_tile),
+                            lambda: GroupedCOO.fromcsr(self, nnz_tile))
+
+    def ell(self, row_tile: int = 8, width: int | None = None) -> "ELL":
+        """RB-kernel feed format, memoized per (row_tile, width)."""
+        return self._cached(("ell", row_tile, width),
+                            lambda: ELL.fromcsr(self, width=width,
+                                                row_tile=row_tile))
+
+    def ell_scatter_index(self):
+        """(row_ids, positions) int32 arrays scattering the flat CSR value
+        stream into the ELL (row, slot) layout — lets callers rebuild
+        ``ELL.vals`` from fresh values (e.g. inside autodiff) without a
+        Python loop.  Requires concrete arrays."""
+        def build():
+            row_ids, pos = _csr_scatter_index(self.indptr)
+            return (jnp.asarray(row_ids, jnp.int32),
+                    jnp.asarray(pos, jnp.int32))
+
+        return self._cached("ell_scatter", build)
 
     def todense(self) -> jax.Array:
         return self.tocoo().todense()
@@ -101,17 +166,14 @@ class CSR:
     @staticmethod
     def fromdense(mat) -> "CSR":
         mat = np.asarray(mat)
-        n_rows = mat.shape[0]
-        indices_l, vals_l, indptr = [], [], [0]
-        for r in range(n_rows):
-            (cols,) = np.nonzero(mat[r])
-            indices_l.append(cols)
-            vals_l.append(mat[r, cols])
-            indptr.append(indptr[-1] + len(cols))
+        # np.nonzero is C-ordered: already sorted by (row, col).
+        rows, cols = np.nonzero(mat)
+        counts = np.bincount(rows, minlength=mat.shape[0])
+        indptr = np.concatenate([[0], np.cumsum(counts)])
         return CSR(
             indptr=jnp.asarray(indptr, jnp.int32),
-            indices=jnp.asarray(np.concatenate(indices_l) if indices_l else [], jnp.int32),
-            vals=jnp.asarray(np.concatenate(vals_l) if vals_l else [], mat.dtype),
+            indices=jnp.asarray(cols, jnp.int32),
+            vals=jnp.asarray(mat[rows, cols]),
             shape=mat.shape,
         )
 
@@ -203,7 +265,7 @@ class ELL:
 
     @staticmethod
     def fromcsr(csr: CSR, width: int | None = None, row_tile: int = 8) -> "ELL":
-        indptr = np.asarray(csr.indptr)
+        indptr = np.asarray(csr.indptr).astype(np.int64)
         indices = np.asarray(csr.indices)
         vals = np.asarray(csr.vals)
         n_rows = csr.shape[0]
@@ -217,10 +279,9 @@ class ELL:
         n_pad = round_up(max(n_rows, 1), row_tile)
         ecols = np.zeros((n_pad, w), np.int32)
         evals = np.zeros((n_pad, w), vals.dtype if vals.size else np.float32)
-        for r in range(n_rows):
-            lo, hi = indptr[r], indptr[r + 1]
-            ecols[r, : hi - lo] = indices[lo:hi]
-            evals[r, : hi - lo] = vals[lo:hi]
+        row_ids, pos = _csr_scatter_index(indptr)
+        ecols[row_ids, pos] = indices
+        evals[row_ids, pos] = vals
         return ELL(cols=jnp.asarray(ecols), vals=jnp.asarray(evals),
                    shape=csr.shape, width=w)
 

@@ -1,29 +1,125 @@
-"""High-level sparse ops: schedule selection + kernel dispatch.
+"""The single public sparse API: schedule coercion + kernel dispatch.
 
-``spmm(a, b)`` with ``schedule='auto'`` runs the data-aware selector
-(core/selector.py) on the matrix statistics — the paper's Table-5
-"dynamic choice" made a library default.
+``spmm``, ``sddmm`` and ``segment_reduce`` all accept ``schedule=`` as a
+name ('EB+PR', ...), a :class:`~repro.core.schedule.Schedule`, an
+:class:`~repro.core.AtomicParallelism` point, or a
+:class:`~repro.core.SegmentGroup`.  ``spmm`` additionally accepts
+``'auto'`` (the data-aware selector — the paper's Table-5 "dynamic
+choice" made a library default); the other ops have no matrix to derive
+statistics from, so ``'auto'`` raises there.
+
+``spmm`` over CSR is differentiable: the forward runs the scheduled
+Pallas kernel, the backward closes the paper's algebra family on itself
+(dvals = SDDMM(dOut, B), dB = Aᵀ·dOut — Sgap Eq. 2c/2d).  Feed-format
+conversions go through the per-(format, tile) cache on ``CSR``, so a
+training loop re-using the same matrix does not re-convert every step.
 """
 from __future__ import annotations
 
-from ..core.atomic_parallelism import KernelSchedule
-from ..core.selector import select_schedule
+import jax
+import jax.numpy as jnp
+
+from ..core.schedule import Schedule, as_schedule
 from ..kernels import ops as kops
-from .formats import CSR
+from ..kernels import ref
+from ..kernels.segment_reduce import segment_reduce as _segment_reduce_kernel
+from .formats import CSR, ELL, GroupedCOO
 from .random import matrix_stats
 
-__all__ = ["spmm", "sddmm"]
+__all__ = ["spmm", "sddmm", "segment_reduce"]
+
+
+def _resolve_schedule(a, b, schedule) -> Schedule:
+    if isinstance(schedule, str) and schedule == "auto":
+        if isinstance(a, CSR):
+            return Schedule.auto(matrix_stats(a), int(b.shape[1]))
+        return Schedule("eb")
+    return as_schedule(schedule)
 
 
 def spmm(a, b, schedule="auto", *, impl: str = "pallas",
          interpret: bool = True):
-    if schedule == "auto":
-        if isinstance(a, CSR):
-            schedule = select_schedule(matrix_stats(a), int(b.shape[1]))
-        else:
-            schedule = KernelSchedule("eb")
-    return kops.spmm(a, b, schedule, impl=impl, interpret=interpret)
+    """out = A @ B for sparse A (CSR / GroupedCOO / ELL) and dense B.
+
+    schedule    'auto' | name | Schedule | AtomicParallelism | SegmentGroup.
+    impl        'pallas' (scheduled kernel) or 'ref' (pure-jnp oracle).
+
+    The CSR + pallas path is differentiable in ``a.vals`` and ``b``.
+    """
+    sched = _resolve_schedule(a, b, schedule)
+    if impl != "ref" and isinstance(a, CSR):
+        return _spmm_csr_diff(a, b, sched, interpret)
+    return kops.spmm(a, b, sched, impl=impl, interpret=interpret)
 
 
-def sddmm(rows, cols, a, b, scale=None, **kw):
-    return kops.sddmm(rows, cols, a, b, scale, **kw)
+def _spmm_csr_diff(a: CSR, b, sched: Schedule, interpret: bool):
+    """Custom-VJP wrapper: scheduled kernel forward, ref backward."""
+    coo = a.tocoo()  # cached on the CSR instance
+    rows, cols = coo.rows, coo.cols
+    n_rows, n_cols = a.shape
+
+    if sched.kernel == "eb":
+        g0 = a.grouped(sched.nnz_tile)
+        pad = g0.nnz_padded - g0.nnz
+
+        def run(vals, bb):
+            vpad = jnp.concatenate(
+                [vals, jnp.zeros((pad,), vals.dtype)]) if pad else vals
+            g = GroupedCOO(rows=g0.rows, cols=g0.cols, vals=vpad,
+                           shape=g0.shape, nnz=g0.nnz, nnz_tile=g0.nnz_tile)
+            return kops.spmm(g, bb, sched, interpret=interpret)
+    else:
+        ell0 = a.ell(row_tile=sched.row_tile)
+        rid, pos = a.ell_scatter_index()
+
+        def run(vals, bb):
+            evals = jnp.zeros(ell0.vals.shape,
+                              vals.dtype).at[rid, pos].set(vals)
+            e = ELL(cols=ell0.cols, vals=evals, shape=ell0.shape,
+                    width=ell0.width)
+            return kops.spmm(e, bb, sched, interpret=interpret)
+
+    @jax.custom_vjp
+    def fn(vals, bb):
+        return run(vals, bb)
+
+    def fwd(vals, bb):
+        return run(vals, bb), (vals, bb)
+
+    def bwd(res, dout):
+        vals, bb = res
+        # dA values: sampled dense-dense product at the sparsity pattern
+        dvals = ref.sddmm_ref(rows, cols, dout, bb).astype(vals.dtype)
+        # dB: transpose SpMM (cols become the segment ids)
+        db = ref.spmm_coo_ref(cols, rows, vals, dout, n_cols).astype(bb.dtype)
+        return dvals, db
+
+    fn.defvjp(fwd, bwd)
+    return fn(a.vals, b)
+
+
+def sddmm(rows, cols, a, b, scale=None, *, schedule=None,
+          nnz_tile: int | None = None, impl: str = "pallas",
+          interpret: bool = True):
+    """vals[t] = <A[rows[t]], B[cols[t]]> (* scale[t]); rows/cols (nnz,).
+
+    ``schedule`` supplies the nnz tile (its ``nnz_tile`` field); an
+    explicit ``nnz_tile=`` overrides it.
+    """
+    if schedule is not None and nnz_tile is None:
+        nnz_tile = as_schedule(schedule).nnz_tile
+    return kops.sddmm(rows, cols, a, b, scale,
+                      nnz_tile=nnz_tile if nnz_tile else 256,
+                      impl=impl, interpret=interpret)
+
+
+def segment_reduce(seg_ids, data, num_segments: int, schedule=None, *,
+                   interpret: bool = True):
+    """out[s] = Σ_{t: seg_ids[t]=s} data[t] through the segment-group
+    kernel.  ``schedule`` carries (nnz_tile -> tile, group_size, strategy);
+    ragged inputs are zero-extended by the kernel wrapper."""
+    sched = as_schedule(schedule)
+    return _segment_reduce_kernel(
+        seg_ids, data, num_segments=num_segments, tile=sched.nnz_tile,
+        group_size=sched.group_size, strategy=sched.strategy,
+        interpret=interpret)

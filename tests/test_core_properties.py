@@ -9,7 +9,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't fail collection
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (DA_SPMM_POINTS, AtomicParallelism, GroupReduceStrategy,
                         enumerate_space, is_legal, segment_group_reduce,
