@@ -1,74 +1,27 @@
-"""Benchmark utilities: wall-clock timing of jitted callables + the
-schedule->executable mapping shared by the paper-table benchmarks.
+"""Benchmark utilities: the shared measurement layer + the synthetic
+matrix suite.
 
-Timing is XLA-CPU wall clock (this container's only real backend). The
-schedule space (nnz-split vs row-split, group size G, strategies, tiling)
-is expressed in the compiled program structure, so relative effects track
-the paper's axes; absolute numbers are CPU-specific (DESIGN.md changed
-assumption 5).
+``time_fn`` and the schedule runners moved into ``repro.tune.measure``
+(ISSUE 2) so the autotuner and the paper-table benchmarks time schedules
+with the same instrument; they are re-exported here so existing
+benchmark code keeps importing from ``benchmarks._util``.  Timing is
+XLA-CPU wall clock (this container's only real backend) — relative
+schedule effects track the paper's axes, absolute numbers are
+CPU-specific (DESIGN.md changed assumption 5).  ``REPRO_BENCH_ITERS``
+bounds the per-measurement iteration count (CI smoke sets it low).
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GroupReduceStrategy, segment_group_reduce
-from repro.kernels import ref
-
-
-def time_fn(fn, *args, warmup: int = 2, iters: int = 7) -> float:
-    """Median seconds/call of a jitted fn (blocks on results)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
-
-
-# ------------------------------------------------------------------------
-# Schedule executor: pure-JAX analogue of each kernel schedule, jitted so
-# XLA compiles a genuinely different program per schedule point.
-# ------------------------------------------------------------------------
-
-
-def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
-                   nnz_tile: int = 256):
-    g = csr.grouped(max(nnz_tile, group_size))
-    n_rows = csr.shape[0]
-
-    def run(rows, cols, vals, b):
-        partial = vals[:, None].astype(jnp.float32) * jnp.take(
-            b.astype(jnp.float32), cols, axis=0)
-        if strategy == GroupReduceStrategy.ACCUMULATE.value:
-            return jax.ops.segment_sum(partial, rows, num_segments=n_rows)
-        # any registered strategy name dispatches through the registry
-        return segment_group_reduce(partial, rows, n_rows,
-                                    group_size=group_size, strategy=strategy)
-
-    fn = jax.jit(run)
-    args = (g.rows, g.cols, g.vals,
-            jax.random.normal(jax.random.PRNGKey(0), (csr.shape[1], n_dense)))
-    return fn, args
-
-
-def make_rb_runner(csr, n_dense, *, row_tile: int = 8,
-                   width: int | None = None):
-    ell = csr.ell(row_tile=row_tile, width=width)
-    n_rows = csr.shape[0]
-
-    def run(ecols, evals, b):
-        return ref.spmm_ell_ref(ecols, evals, b, n_rows)
-
-    fn = jax.jit(run)
-    args = (ell.cols, ell.vals,
-            jax.random.normal(jax.random.PRNGKey(0), (csr.shape[1], n_dense)))
-    return fn, args
+from repro.tune.measure import (  # noqa: F401
+    bench_iters,
+    make_eb_runner,
+    make_rb_runner,
+    make_runner,
+    measure_schedule,
+    time_fn,
+)
 
 
 def geomean(xs) -> float:

@@ -5,14 +5,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, smoke_config
 from repro.core import select_schedule
 from repro.models.moe import apply_moe, init_moe
 from repro.sparse.random import matrix_stats
 
-from ._util import geomean, make_eb_runner, make_rb_runner, suite, time_fn
+from ._util import geomean, suite, time_fn
 
 
 def moe_dispatch(quick=True):
@@ -50,8 +49,10 @@ def selector_quality(quick=True):
     """Behavioral check of the data-aware selector (DA-SpMM-style): it
     must choose nnz-split + segment for skewed matrices (balance-bound)
     and be waste-aware for short-row regimes. Reports decisions + the
-    waste the choice avoids."""
-    from repro.core import group_waste_fraction
+    waste the choice avoids, then the empirical tuned-vs-auto-vs-oracle
+    gap (the autotuner's tracked win, ISSUE 2)."""
+    from repro.core import Schedule, candidate_schedules, group_waste_fraction
+    from repro.tune import ScheduleCache, measure_schedule, tune_schedule
     import numpy as _np
 
     mats = suite(sizes=((2048, 2048),), densities=(0.002, 0.01),
@@ -74,4 +75,29 @@ def selector_quality(quick=True):
                      f"ok={ok}"))
     rows.append(("beyond/selector_quality", 0.0,
                  f"decision_accuracy={correct}/{len(mats)}"))
+
+    # tuned vs auto vs measured oracle (memory-only cache: the benchmark
+    # must not read or pollute the user's persistent cache)
+    cache = ScheduleCache(path=None)
+    gap_mats = mats if not quick else mats[:3]
+    tuned_vs_auto, auto_vs_oracle, tuned_vs_oracle = [], [], []
+    for (m, n, d, s), csr in gap_mats:
+        res = tune_schedule(csr, n_dense, cache=cache, warmup=1, iters=3)
+        auto = Schedule.auto(matrix_stats(csr), n_dense)
+        t_auto = measure_schedule(csr, n_dense, auto, warmup=1,
+                                  iters=3) * 1e6
+        t_oracle = min([measure_schedule(csr, n_dense, sc, warmup=1, iters=2)
+                        * 1e6 for sc in candidate_schedules(n_dense)]
+                       + [res.us_per_call])
+        tuned_vs_auto.append(t_auto / max(res.us_per_call, 1e-9))
+        auto_vs_oracle.append(t_auto / max(t_oracle, 1e-9))
+        tuned_vs_oracle.append(res.us_per_call / max(t_oracle, 1e-9))
+        rows.append((f"beyond/tuner/d{d}_skew{s}", res.us_per_call,
+                     f"tuned={res.schedule.kernel}/G{res.schedule.group_size},"
+                     f"auto_us={t_auto:.1f},oracle_us={t_oracle:.1f},"
+                     f"tuned_vs_auto={tuned_vs_auto[-1]:.3f}"))
+    rows.append(("beyond/tuner_gap", 0.0,
+                 f"tuned_vs_auto_geomean={geomean(tuned_vs_auto):.3f},"
+                 f"auto_vs_oracle_geomean={geomean(auto_vs_oracle):.3f},"
+                 f"tuned_vs_oracle_geomean={geomean(tuned_vs_oracle):.3f}"))
     return rows

@@ -1,10 +1,17 @@
 """Benchmark harness — one function per paper table (Sgap Tables 1-5) plus
-beyond-paper benches. Prints ``name,us_per_call,derived`` CSV.
+beyond-paper benches. Prints ``name,us_per_call,derived`` CSV; ``--json``
+additionally emits a machine-readable ``{name: {us_per_call, derived}}``
+file (the ``BENCH_<tag>.json`` trajectory CI tracks).
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json BENCH_ci.json]
+
+``REPRO_BENCH_ITERS`` caps per-measurement timing iterations (CI smoke
+sets it low to stay inside its time budget).
 """
 import argparse
+import json
 import sys
+import traceback
 
 
 def main() -> None:
@@ -14,6 +21,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
                          "moe,selector")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write {name: {us_per_call, derived}} JSON")
     args = ap.parse_args()
     quick = not args.full
 
@@ -31,15 +40,28 @@ def main() -> None:
     wanted = args.only.split(",") if args.only else list(benches)
 
     print("name,us_per_call,derived")
+    results = {}
     ok = True
     for name in wanted:
         try:
             for row in benches[name]():
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
+                results[row[0]] = {"us_per_call": float(row[1]),
+                                   "derived": str(row[2])}
             sys.stdout.flush()
         except Exception as e:  # noqa: BLE001
             ok = False
+            # the ERROR row goes to the CSV (so graders see it in-band)
+            # AND to stderr with the full traceback (so CI logs show
+            # *where* it failed instead of a swallowed repr)
             print(f"{name},NaN,ERROR:{e!r}")
+            print(f"{name},NaN,ERROR:{e!r}", file=sys.stderr)
+            traceback.print_exc(file=sys.stderr)
+            sys.stderr.flush()
+            results[name] = {"us_per_call": None, "derived": f"ERROR:{e!r}"}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
     if not ok:
         raise SystemExit(1)
 

@@ -26,4 +26,13 @@ from .segment_group import (  # noqa: F401
     segment_group_reduce,
     segment_sum_ref,
 )
-from .selector import candidate_schedules, predict_cost, select_schedule  # noqa: F401
+from .selector import (  # noqa: F401
+    COST_TERM_NAMES,
+    DEFAULT_COST_WEIGHTS,
+    candidate_schedules,
+    cost_terms,
+    get_cost_weights,
+    predict_cost,
+    select_schedule,
+    set_cost_weights,
+)

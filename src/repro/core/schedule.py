@@ -244,6 +244,16 @@ class Schedule:
         return select_schedule(stats, n_dense_cols)
 
     @classmethod
+    def tune(cls, matrix, n_dense_cols: int, **kw) -> "Schedule":
+        """Empirically tuned schedule for ``matrix @ B`` — measures the
+        top candidates (or replays the fingerprint cache) via
+        ``repro.tune.tune_schedule``; ``**kw`` forwards (cache=, top_k=,
+        ...)."""
+        from ..tune import tune_schedule
+
+        return tune_schedule(matrix, n_dense_cols, **kw).schedule
+
+    @classmethod
     def from_group(cls, group: SegmentGroup, **kw) -> "Schedule":
         """Lift a :class:`SegmentGroup` (group width + strategy) into a
         full schedule; tiling fields come from ``**kw`` or defaults."""
@@ -280,12 +290,15 @@ def _lcm_tile(tile: int, group: int) -> int:
 
 
 def as_schedule(s, *, stats: dict | None = None,
-                n_dense_cols: int | None = None) -> Schedule:
+                n_dense_cols: int | None = None,
+                matrix=None) -> Schedule:
     """Coerce any schedule-like value into a :class:`Schedule`.
 
     Accepts ``None`` (library default), a :class:`Schedule`, a DA-SpMM name
-    ('EB+PR', ...), 'auto' (requires ``stats`` and ``n_dense_cols``), an
-    :class:`AtomicParallelism` point, or a :class:`SegmentGroup`.
+    ('EB+PR', ...), 'auto' (requires ``stats`` and ``n_dense_cols``),
+    'tune' (requires ``matrix`` — a CSR — and ``n_dense_cols``; runs or
+    replays the empirical autotuner), an :class:`AtomicParallelism`
+    point, or a :class:`SegmentGroup`.
     """
     if s is None:
         return Schedule()
@@ -301,6 +314,13 @@ def as_schedule(s, *, stats: dict | None = None,
                     "n_dense_cols= to as_schedule, or use an op that "
                     "derives them (repro.sparse.spmm)")
             return Schedule.auto(stats, n_dense_cols)
+        if s == "tune":
+            if matrix is None or n_dense_cols is None:
+                raise ValueError(
+                    "'tune' needs the matrix itself: pass matrix= (CSR) "
+                    "and n_dense_cols= to as_schedule, or use an op that "
+                    "supplies them (repro.sparse.spmm)")
+            return Schedule.tune(matrix, n_dense_cols)
         return Schedule.named(s)
     from .atomic_parallelism import AtomicParallelism
 

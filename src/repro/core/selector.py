@@ -11,18 +11,64 @@ Given matrix statistics and the dense-column count N, pick an
 * segment strategy when writeback targets are runtime-dependent (high CV),
   parallel strategy when rows are long and regular.
 
-Also exposes :func:`predict_cost` — the napkin-math cost model used both
-here and by the §Perf hillclimb loop.
+Also exposes :func:`predict_cost` — the cost model used here, by the
+§Perf hillclimb loop and by the empirical autotuner (``repro.tune``).
+The model is a weighted sum of four raw terms (:func:`cost_terms`); the
+weights default to the hand-set napkin values but are *calibratable*:
+``repro.tune.calibrate`` least-squares fits them against measured
+timings and installs the fit via :func:`set_cost_weights`.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 from .schedule import Schedule
 from .segment_group import group_waste_fraction
 
-__all__ = ["select_schedule", "predict_cost", "candidate_schedules"]
+__all__ = [
+    "select_schedule",
+    "predict_cost",
+    "candidate_schedules",
+    "cost_terms",
+    "COST_TERM_NAMES",
+    "DEFAULT_COST_WEIGHTS",
+    "get_cost_weights",
+    "set_cost_weights",
+]
+
+COST_TERM_NAMES = ("work", "waste", "writeback", "gather")
+
+#: Hand-set napkin weights (the pre-calibration model): cost =
+#: work + waste + 2*writeback + 0.25*gather.
+DEFAULT_COST_WEIGHTS: Tuple[float, float, float, float] = (1.0, 1.0, 2.0,
+                                                           0.25)
+
+_cost_weights: Tuple[float, float, float, float] = DEFAULT_COST_WEIGHTS
+
+
+def get_cost_weights() -> Tuple[float, float, float, float]:
+    """The active (work, waste, writeback, gather) term weights."""
+    return _cost_weights
+
+
+def set_cost_weights(weights: Sequence[float] | None) -> None:
+    """Install calibrated term weights (``None`` restores the defaults).
+
+    Affects every subsequent :func:`predict_cost` / ``Schedule.auto``
+    call — this is how measured tuning data feeds back into the static
+    selector (``repro.tune.calibrate``).
+    """
+    global _cost_weights
+    if weights is None:
+        _cost_weights = DEFAULT_COST_WEIGHTS
+        return
+    w = tuple(float(x) for x in weights)
+    if len(w) != 4:
+        raise ValueError(f"need 4 weights {COST_TERM_NAMES}, got {len(w)}")
+    if any(x < 0 for x in w) or not any(x > 0 for x in w):
+        raise ValueError(f"weights must be >= 0 with at least one > 0: {w}")
+    _cost_weights = w
 
 
 def candidate_schedules(n_dense_cols: int) -> list[Schedule]:
@@ -43,14 +89,22 @@ def candidate_schedules(n_dense_cols: int) -> list[Schedule]:
     return cands
 
 
-def predict_cost(stats: Dict, sched: Schedule, n_dense_cols: int) -> float:
-    """Relative cost model (lower = better). Terms:
+def cost_terms(stats: Dict, sched: Schedule,
+               n_dense_cols: int) -> Tuple[float, float, float, float]:
+    """The four raw cost-model terms (lower = better, unweighted):
 
     work        nnz * C multiply-adds (same for every schedule);
     waste       zero-extension padding lanes (rb: rows padded to ELL width;
-                eb: nnz padded to tile);
-    writeback   segment writeback traffic ~ rows touched per tile;
+                eb: short rows padded to the group width) — grows with G;
+    writeback   segment writeback events: one per row touched plus one
+                carry per group boundary (eb) — the carry part *shrinks*
+                with G, which is the paper's reason to widen groups; rb
+                pays exactly one per row;
     gather      dense-row gather traffic ~ nnz * col_tile.
+
+    waste and writeback pull G in opposite directions, so the
+    waste:writeback weight ratio (calibratable — ``repro.tune``) decides
+    the group size, exactly the machine-dependent trade the paper tunes.
     """
     nnz = max(1, stats["nnz"])
     C = max(1, n_dense_cols)
@@ -68,12 +122,22 @@ def predict_cost(stats: Dict, sched: Schedule, n_dense_cols: int) -> float:
             [max(1, int(row_mean))], sched.group_size
         )
         waste = work * waste_frac
-        # one writeback per distinct row per group (>= 1 per group)
+        # one writeback per row touched + one carry per group boundary
         groups = nnz / sched.group_size
-        rows_per_group = max(1.0, sched.group_size / row_mean)
-        writeback = groups * rows_per_group * C
+        rows_touched = nnz / row_mean
+        writeback = (rows_touched + groups) * C
     gather = nnz * min(C, sched.col_tile)
-    return work + waste + 2.0 * writeback + 0.25 * gather
+    return (float(work), float(waste), float(writeback), float(gather))
+
+
+def predict_cost(stats: Dict, sched: Schedule, n_dense_cols: int,
+                 weights: Sequence[float] | None = None) -> float:
+    """Weighted relative cost (lower = better): dot of :func:`cost_terms`
+    with ``weights`` (default: the active, possibly calibrated, weights)."""
+    w = _cost_weights if weights is None else tuple(weights)
+    terms = cost_terms(stats, sched, n_dense_cols)
+    return (w[0] * terms[0] + w[1] * terms[1]
+            + w[2] * terms[2] + w[3] * terms[3])
 
 
 def select_schedule(stats: Dict, n_dense_cols: int) -> Schedule:

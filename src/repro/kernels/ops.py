@@ -35,6 +35,33 @@ def vmem_footprint_eb(k, n_rows, sched: Schedule, itemsize=4) -> int:
     )
 
 
+def vmem_footprint_rb(k, width, sched: Schedule, itemsize=4,
+                      width_tile: int = 64) -> int:
+    """Working set the RB kernel claims per grid cell (see spmm_rb.py):
+    the whole-K B block plus the (row_tile × width_tile) ELL slabs, their
+    gathered expansion, and the output block."""
+    wt = min(max(width, 1), width_tile)
+    return itemsize * (
+        k * sched.col_tile                       # B block
+        + 2 * sched.row_tile * wt                # ecols + evals slabs
+        + sched.row_tile * wt * sched.col_tile   # gathered B rows
+        + sched.row_tile * sched.col_tile        # out block
+    )
+
+
+def schedule_fits_vmem(sched: Schedule, *, n_rows: int, n_cols: int,
+                       row_max: int = 0, itemsize: int = 4,
+                       budget: int = _VMEM_BYTES) -> bool:
+    """Whether a schedule's per-cell working set fits the VMEM budget —
+    the feasibility predicate the autotuner prunes candidates with before
+    spending measurement time on them."""
+    if sched.kernel == "eb":
+        need = vmem_footprint_eb(n_cols, n_rows, sched, itemsize)
+    else:
+        need = vmem_footprint_rb(n_cols, max(row_max, 1), sched, itemsize)
+    return need <= budget
+
+
 def spmm(a, b, schedule: Schedule | None = None, *,
          impl: str = "pallas", interpret: bool = True):
     """out = A @ B for sparse A (CSR / GroupedCOO / ELL) and dense B.

@@ -1,24 +1,29 @@
-import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
-# ruff: noqa: E402
 """§Perf hillclimb driver: re-run selected cells with optimization
 variants and print before/after roofline terms.
 
     PYTHONPATH=src python -m repro.launch.hillclimb [--cell arch:shape:tag]
+    PYTHONPATH=src python -m repro.launch.hillclimb --spmm [--n-dense 4]
 
-Variants are cfg-level knobs (tags):
+``--spmm`` hillclimbs *schedules* instead of cfg knobs: it runs the
+empirical autotuner (``repro.tune``) over the synthetic matrix suite,
+consulting and populating the persistent fingerprint cache
+(``REPRO_TUNE_CACHE``) — a second run replays every cell for free, and
+serving (``ServeEngine.spmm``) picks the tuned schedules up from the
+same cache.  Prints auto (static selector) vs tuned wall clock per cell.
+
+Variants for the roofline mode are cfg-level knobs (tags):
     sp        seq_parallel_attn=True (Megatron-SP attention)
     inplace   decode_inplace_cache=True (fori_loop cache, no double buffer)
     mb16      microbatches=16
     nochunkkv kv_chunk=2048 (bigger flash kv tiles)
+
+The roofline mode imports ``.dryrun``, which forces a 512-device host
+platform *at import* — that is why it is imported lazily per mode:
+``--spmm`` must measure under the same single-device XLA environment the
+serving process that replays the cache will run under.
 """
 import argparse
 import json
-import pathlib
-
-from .dryrun import OUT_DIR, run_cell
 
 VARIANTS = {
     "sp": {"overrides": {"seq_parallel_attn": True}},
@@ -50,6 +55,8 @@ DEFAULT_PLAN = [
 
 
 def compare(arch, shape, tag):
+    from .dryrun import OUT_DIR
+
     base = json.loads(
         (OUT_DIR / f"{arch}__{shape}__16x16.json").read_text())
     opt = json.loads(
@@ -66,11 +73,52 @@ def compare(arch, shape, tag):
           f"{opt['roofline_fraction']:.4f}")
 
 
+def spmm_hillclimb(n_dense: int = 4, quick: bool = True):
+    """Tune schedules for the synthetic suite through the persistent
+    cache; print auto-vs-tuned per cell and the geomean win."""
+    import numpy as np
+
+    from repro.core import Schedule
+    from repro.sparse import matrix_stats, random_csr
+    from repro.tune import default_cache, measure_schedule, tune_schedule
+
+    cache = default_cache()
+    cells = [(1024 if quick else 4096, d, s)
+             for d in (0.002, 0.01) for s in (0.0, 1.5)]
+    wins = []
+    for m, d, s in cells:
+        csr = random_csr(m, m, density=d, skew=s, seed=int(s * 10))
+        res = tune_schedule(csr, n_dense, cache=cache)
+        auto = Schedule.auto(matrix_stats(csr), n_dense)
+        t_auto = measure_schedule(csr, n_dense, auto) * 1e6
+        wins.append(t_auto / max(res.us_per_call, 1e-9))
+        src = "cache" if res.from_cache else f"{res.n_measurements} meas"
+        print(f"--- spmm {m}x{m} d={d} skew={s} N={n_dense} [{src}] ---")
+        print(f"  auto  {auto}: {t_auto:9.1f} us")
+        print(f"  tuned {res.schedule}: {res.us_per_call:9.1f} us "
+              f"({wins[-1]:.2f}x)")
+    print(f"geomean tuned-vs-auto: "
+          f"{float(np.exp(np.mean(np.log(np.maximum(wins, 1e-9))))):.3f}x "
+          f"({len(cache)} records in {cache.path})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", action="append", default=None,
                     help="arch:shape:tag (repeatable)")
+    ap.add_argument("--spmm", action="store_true",
+                    help="hillclimb sparse schedules via the autotuner "
+                         "(populates the persistent tuner cache)")
+    ap.add_argument("--n-dense", type=int, default=4)
+    ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+
+    if args.spmm:
+        spmm_hillclimb(args.n_dense, quick=not args.full)
+        return
+
+    # roofline mode: importing .dryrun forces the 512-device host platform
+    from .dryrun import run_cell
 
     plan = []
     if args.cell:

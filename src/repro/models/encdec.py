@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from .attention import decode_attention, flash_attention
-from .layers import (apply_dense, apply_mlp, apply_norm, embed, init_dense,
+from .layers import (apply_dense, apply_mlp, apply_norm, embed,
                      init_embedding, init_mlp, init_norm, layer_scan,
                      lm_loss_from_features, unembed)
 from .transformer import init_attn

@@ -1,8 +1,6 @@
 """Mamba-2 language model (attention-free): x += mixer(norm(x)) per layer."""
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

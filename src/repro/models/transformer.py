@@ -7,14 +7,12 @@ vlm.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from .attention import decode_attention, flash_attention
 from .layers import (apply_dense, apply_mlp, apply_norm, apply_rope,
-                     cross_entropy_loss, embed, init_dense, init_embedding,
+                     embed, init_dense, init_embedding,
                      init_mlp, init_norm, layer_scan, lm_loss_from_features,
                      rmsnorm, seq_shard, seq_unshard, unembed)
 from .moe import apply_moe, init_moe

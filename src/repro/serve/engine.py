@@ -4,6 +4,13 @@ Slots hold independent sequences; ``step`` decodes one token for every
 active slot with a single jit'd serve_step (the decode path the dry-run
 lowers). Finished slots are refilled from the request queue via per-slot
 prefill; greedy or temperature sampling.
+
+Sparse side-channel workloads (retrieval adapters, graph features, MoE
+routing tables) go through :meth:`ServeEngine.spmm`, which resolves the
+schedule from the persistent tuner cache (``repro.tune``) — tuning
+happens ahead of time via :meth:`ServeEngine.prepare_sparse` (or
+``launch.hillclimb --spmm``); the request path itself *never* runs a
+measurement.
 """
 from __future__ import annotations
 
@@ -24,7 +31,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, api, params, *, slots: int = 4, max_len: int = 128,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 tuner_cache=None):
         self.api = api
         self.params = params
         self.slots = slots
@@ -37,9 +45,51 @@ class ServeEngine:
         self._decode = jax.jit(api.decode_step)
         self.results: dict[int, list[int]] = {}
         self._next_tokens = np.zeros((slots,), np.int32)
+        # repro.tune.ScheduleCache (None -> the process default cache);
+        # consulted by the sparse side-channel path below.  The memo maps
+        # fingerprint cache keys -> tuned Schedule, so it survives operand
+        # re-creation and never aliases two different matrices (ids can be
+        # reused after GC; fingerprints cannot collide that way).
+        self.tuner_cache = tuner_cache
+        self._sched_memo: dict[str, object] = {}
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    # -- tuned sparse side-channel ----------------------------------------
+
+    def prepare_sparse(self, csr, n_dense_cols: int):
+        """Ahead-of-time tuning for a sparse operand this engine will
+        serve with: measures (or replays the fingerprint cache) and
+        persists the winner, so :meth:`spmm` replays it for free."""
+        from ..tune import cache_key, tune_schedule
+
+        sched = tune_schedule(csr, n_dense_cols,
+                              cache=self.tuner_cache).schedule
+        self._sched_memo[cache_key(csr, n_dense_cols)] = sched
+        return sched
+
+    def spmm(self, a, b):
+        """Serving-path SpMM: schedule comes from the per-engine memo,
+        then the persistent tuner cache, else the static selector —
+        never from an inline measurement (requests must not stall on a
+        tuning run).  Cache misses are not memoized, so tuning done
+        later (``hillclimb --spmm``, another engine's ``prepare_sparse``)
+        is picked up on the next call.  Non-CSR operands have no
+        fingerprint; they fall through to the library default, matching
+        ``repro.sparse.spmm(..., schedule="auto")``."""
+        from ..sparse import spmm as _spmm
+        from ..sparse.formats import CSR
+        from ..tune import cache_key, cached_or_auto
+
+        if not isinstance(a, CSR):
+            return _spmm(a, b, schedule="auto")
+        key = cache_key(a, int(b.shape[1]))  # memoized on the CSR
+        sched = self._sched_memo.get(key)
+        if sched is None:
+            sched = cached_or_auto(a, int(b.shape[1]),
+                                   cache=self.tuner_cache, key=key)
+        return _spmm(a, b, schedule=sched)
 
     def _slot_prefill(self, slot: int, req: Request):
         """Prefill one slot: run the prompt batched-by-1 and splice the

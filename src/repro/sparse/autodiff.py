@@ -14,7 +14,6 @@ the same kernels the forward uses.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from ..kernels import ref
 

@@ -24,7 +24,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..kernels import ref

@@ -30,10 +30,15 @@ __all__ = ["spmm", "sddmm", "segment_reduce"]
 
 
 def _resolve_schedule(a, b, schedule) -> Schedule:
-    if isinstance(schedule, str) and schedule == "auto":
-        if isinstance(a, CSR):
-            return Schedule.auto(matrix_stats(a), int(b.shape[1]))
-        return Schedule("eb")
+    if isinstance(schedule, str) and schedule in ("auto", "tune"):
+        if not isinstance(a, CSR):
+            # no CSR to derive statistics (or a fingerprint) from
+            return Schedule("eb")
+        if schedule == "tune":
+            from ..tune import tune_schedule
+
+            return tune_schedule(a, int(b.shape[1])).schedule
+        return Schedule.auto(matrix_stats(a), int(b.shape[1]))
     return as_schedule(schedule)
 
 
@@ -41,7 +46,10 @@ def spmm(a, b, schedule="auto", *, impl: str = "pallas",
          interpret: bool = True):
     """out = A @ B for sparse A (CSR / GroupedCOO / ELL) and dense B.
 
-    schedule    'auto' | name | Schedule | AtomicParallelism | SegmentGroup.
+    schedule    'auto' | 'tune' | name | Schedule | AtomicParallelism |
+                SegmentGroup.  'tune' measures the top schedule
+                candidates for this matrix (replaying the persistent
+                fingerprint cache when it can — see ``repro.tune``).
     impl        'pallas' (scheduled kernel) or 'ref' (pure-jnp oracle).
 
     The CSR + pallas path is differentiable in ``a.vals`` and ``b``.
@@ -104,10 +112,19 @@ def sddmm(rows, cols, a, b, scale=None, *, schedule=None,
     """vals[t] = <A[rows[t]], B[cols[t]]> (* scale[t]); rows/cols (nnz,).
 
     ``schedule`` supplies the nnz tile (its ``nnz_tile`` field); an
-    explicit ``nnz_tile=`` overrides it.
+    explicit ``nnz_tile=`` overrides it.  ``schedule="tune"`` reuses the
+    tuner's winner for this nnz profile (SDDMM only exposes the tile
+    axis, so the tuned ``nnz_tile`` is what transfers).
     """
     if schedule is not None and nnz_tile is None:
-        nnz_tile = as_schedule(schedule).nnz_tile
+        if isinstance(schedule, str) and schedule == "tune":
+            from ..tune import tune_segment_reduce
+
+            nnz_tile = tune_segment_reduce(
+                rows, int(a.shape[1]),
+                num_segments=int(jnp.max(rows)) + 1).schedule.nnz_tile
+        else:
+            nnz_tile = as_schedule(schedule).nnz_tile
     return kops.sddmm(rows, cols, a, b, scale,
                       nnz_tile=nnz_tile if nnz_tile else 256,
                       impl=impl, interpret=interpret)
@@ -117,8 +134,16 @@ def segment_reduce(seg_ids, data, num_segments: int, schedule=None, *,
                    interpret: bool = True):
     """out[s] = Σ_{t: seg_ids[t]=s} data[t] through the segment-group
     kernel.  ``schedule`` carries (nnz_tile -> tile, group_size, strategy);
-    ragged inputs are zero-extended by the kernel wrapper."""
-    sched = as_schedule(schedule)
+    ``schedule="tune"`` measures (tile, G, strategy) for this segment
+    profile (cached by fingerprint); ragged inputs are zero-extended by
+    the kernel wrapper."""
+    if isinstance(schedule, str) and schedule == "tune":
+        from ..tune import tune_segment_reduce
+
+        sched = tune_segment_reduce(
+            seg_ids, int(data.shape[1]), num_segments).schedule
+    else:
+        sched = as_schedule(schedule)
     return _segment_reduce_kernel(
         seg_ids, data, num_segments=num_segments, tile=sched.nnz_tile,
         group_size=sched.group_size, strategy=sched.strategy,

@@ -10,7 +10,6 @@ automatically.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax

@@ -1,0 +1,46 @@
+"""Empirical schedule autotuner (ISSUE 2; paper Table 4's search, made a
+library subsystem).
+
+``tune_schedule(csr, n_dense_cols)`` warm-starts from the static cost
+model, measures the top-k candidates, hillclimbs around the winner, and
+persists the result in a fingerprint-keyed on-disk cache
+(``REPRO_TUNE_CACHE``) so the search runs once per matrix profile.
+``schedule="tune"`` on ``repro.sparse.spmm/sddmm/segment_reduce`` routes
+here; ``cached_or_auto`` is the measurement-free serving-path resolver;
+``calibrate`` feeds measured timings back into ``Schedule.auto``'s cost
+model.  See DESIGN.md §6.
+"""
+from .cache import (  # noqa: F401
+    SCHEMA_VERSION,
+    ScheduleCache,
+    TuneRecord,
+    cache_key,
+    default_cache,
+    default_cache_path,
+    fingerprint,
+    fingerprint_from_lengths,
+    set_default_cache,
+)
+from .calibrate import (  # noqa: F401
+    CalibrationResult,
+    CalibrationSample,
+    calibrate,
+    collect_samples,
+    fit_weights,
+    model_regret,
+)
+from .measure import (  # noqa: F401
+    bench_iters,
+    make_eb_runner,
+    make_rb_runner,
+    make_runner,
+    measure_schedule,
+    time_fn,
+)
+from .search import (  # noqa: F401
+    TuneResult,
+    cached_or_auto,
+    schedule_key,
+    tune_schedule,
+    tune_segment_reduce,
+)

@@ -1,0 +1,223 @@
+"""Persistent tuning cache keyed by a matrix fingerprint.
+
+A *fingerprint* summarizes the statistics the schedule space actually
+responds to — shape, nnz, row-length histogram quantiles and row-length
+CV — so two matrices with the same sparsity *profile* share a tuning
+record even if their patterns differ.  The cache key is
+``fingerprint × n_dense_cols × backend``: dense-column count changes the
+workload/balance trade-off (DA-SpMM's N axis) and timings never transfer
+across backends.
+
+Records serialize to a single JSON file (``REPRO_TUNE_CACHE`` or
+``~/.cache/repro/schedule_cache.json``) with a schema version; a version
+mismatch drops the file (stale-schema records silently re-tune rather
+than crash).  ``ScheduleCache(path=None)`` is memory-only — used by
+benchmarks and tests that must not touch the user's cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import tempfile
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core import Schedule
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "TuneRecord",
+    "ScheduleCache",
+    "cache_key",
+    "default_cache",
+    "default_cache_path",
+    "fingerprint",
+    "fingerprint_from_lengths",
+    "set_default_cache",
+]
+
+SCHEMA_VERSION = 1
+
+_QUANTILES = (0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)
+
+
+def fingerprint_from_lengths(lengths, shape, nnz: int) -> str:
+    """Fingerprint from a row-length (or segment-length) histogram.
+
+    Quantiles are rounded to ints and CV to 3 decimals: small pattern
+    perturbations that cannot move the schedule choice hash identically,
+    while skew/scale changes that do move it produce a fresh key.
+    """
+    lengths = np.asarray(lengths, np.float64)
+    lengths = lengths[lengths > 0]
+    if lengths.size:
+        qs = [int(round(q)) for q in np.quantile(lengths, _QUANTILES)]
+        mean = float(lengths.mean())
+        cv = float(lengths.std() / mean) if mean > 0 else 0.0
+    else:
+        qs = [0] * len(_QUANTILES)
+        cv = 0.0
+    qstr = "-".join(str(q) for q in qs)
+    return (f"m{shape[0]}x{shape[1]}_nnz{int(nnz)}"
+            f"_cv{cv:.3f}_q{qstr}")
+
+
+def fingerprint(csr) -> str:
+    """Fingerprint of a :class:`~repro.sparse.formats.CSR` matrix.
+
+    Memoized through the CSR's per-instance conversion cache (where it
+    has one): the O(n_rows) histogram pass runs once per matrix, so
+    serving-path lookups (``ServeEngine.spmm`` -> ``cached_or_auto``)
+    cost a dict probe, not a device sync."""
+    def build():
+        return fingerprint_from_lengths(
+            np.asarray(csr.row_lengths()), csr.shape, csr.nnz)
+
+    cached = getattr(csr, "_cached", None)
+    return cached("fingerprint", build) if cached is not None else build()
+
+
+def cache_key(csr, n_dense_cols: int, backend: str | None = None) -> str:
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return f"{fingerprint(csr)}|N{int(n_dense_cols)}|{backend}"
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecord:
+    """One cached tuning outcome."""
+
+    schedule: Schedule
+    us_per_call: float
+    measured: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {
+            "schedule": dataclasses.asdict(self.schedule),
+            "us_per_call": self.us_per_call,
+            "measured": self.measured,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "TuneRecord":
+        return TuneRecord(schedule=Schedule(**d["schedule"]),
+                          us_per_call=float(d["us_per_call"]),
+                          measured=dict(d.get("measured", {})))
+
+
+def default_cache_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return pathlib.Path(env)
+    return (pathlib.Path(os.environ.get("XDG_CACHE_HOME",
+                                        pathlib.Path.home() / ".cache"))
+            / "repro" / "schedule_cache.json")
+
+
+class ScheduleCache:
+    """On-disk (or memory-only when ``path=None``) map of cache key ->
+    :class:`TuneRecord`.  Load is lazy; ``save`` writes atomically."""
+
+    def __init__(self, path: "os.PathLike | str | None" = ...):
+        if path is ...:
+            path = default_cache_path()
+        self.path = pathlib.Path(path) if path is not None else None
+        self._data: Dict[str, TuneRecord] = {}
+        self._loaded = self.path is None
+
+    # -- persistence -------------------------------------------------------
+
+    def load(self) -> "ScheduleCache":
+        if self._loaded:
+            return self
+        self._loaded = True
+        if self.path is None or not self.path.exists():
+            return self
+        try:
+            raw = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return self
+        if raw.get("version") != SCHEMA_VERSION:
+            return self  # stale schema: drop, re-tune lazily
+        for key, rec in raw.get("records", {}).items():
+            try:
+                self._data[key] = TuneRecord.from_json(rec)
+            except (KeyError, TypeError, ValueError):
+                continue  # one bad record must not poison the rest
+        return self
+
+    def save(self) -> None:
+        if self.path is None:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        # merge-on-save: another process sharing this file may have
+        # persisted records since we loaded — fold the on-disk state in
+        # (our own keys win) so concurrent tuners don't drop each
+        # other's work
+        on_disk = ScheduleCache(self.path).load()
+        merged = dict(on_disk._data)
+        merged.update(self._data)
+        self._data = merged
+        payload = {"version": SCHEMA_VERSION,
+                   "records": {k: r.to_json()
+                               for k, r in sorted(self._data.items())}}
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- mapping -----------------------------------------------------------
+
+    def get(self, key: str) -> Optional[TuneRecord]:
+        self.load()
+        return self._data.get(key)
+
+    def put(self, key: str, record: TuneRecord) -> None:
+        self.load()
+        self._data[key] = record
+
+    def __len__(self) -> int:
+        self.load()
+        return len(self._data)
+
+    def __contains__(self, key: str) -> bool:
+        return self.get(key) is not None
+
+    def keys(self):
+        self.load()
+        return self._data.keys()
+
+
+_DEFAULT_CACHES: Dict[str, ScheduleCache] = {}
+_OVERRIDE: Optional[ScheduleCache] = None
+
+
+def default_cache() -> ScheduleCache:
+    """Process-wide cache at :func:`default_cache_path` (re-resolved each
+    call so ``REPRO_TUNE_CACHE`` changes — e.g. in tests — take effect)."""
+    if _OVERRIDE is not None:
+        return _OVERRIDE
+    path = str(default_cache_path())
+    cache = _DEFAULT_CACHES.get(path)
+    if cache is None:
+        cache = _DEFAULT_CACHES[path] = ScheduleCache(path)
+    return cache
+
+
+def set_default_cache(cache: Optional[ScheduleCache]) -> None:
+    """Override the default cache (``None`` restores path-based lookup)."""
+    global _OVERRIDE
+    _OVERRIDE = cache

@@ -1,0 +1,167 @@
+"""Calibrate the static cost model against measured timings.
+
+``predict_cost`` is a weighted sum of four raw terms
+(``core.selector.cost_terms``); the hand-set napkin weights are a prior,
+not a measurement.  This module closes the loop: collect
+(terms, measured-seconds) samples over a matrix suite, solve the
+non-negative least-squares problem
+
+    min_w || T @ w - t ||^2,   w >= 0
+
+(T the terms matrix, t the measured timings), and install the fit via
+``core.selector.set_cost_weights`` so ``Schedule.auto`` itself improves
+from tuning data.  The quality metric is *regret*: per matrix, the
+measured time of the model's argmin divided by the measured oracle
+minimum (1.0 = the model always picks the empirical winner); reported as
+a geomean over the suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import Schedule, candidate_schedules
+from ..core.selector import cost_terms, get_cost_weights, set_cost_weights
+from .measure import measure_schedule
+
+__all__ = [
+    "CalibrationSample",
+    "CalibrationResult",
+    "collect_samples",
+    "fit_weights",
+    "model_regret",
+    "calibrate",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationSample:
+    """One (matrix, schedule) observation: the model terms and the
+    measured seconds/call.  ``group`` identifies the matrix so regret can
+    be computed per-matrix."""
+
+    group: int
+    terms: Tuple[float, float, float, float]
+    seconds: float
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationResult:
+    weights: Tuple[float, float, float, float]
+    regret_before: float
+    regret_after: float
+    n_samples: int
+
+
+def collect_samples(
+    mats: Sequence,
+    n_dense_cols: int = 4,
+    *,
+    schedules: Optional[Sequence[Schedule]] = None,
+    measure: Optional[Callable] = None,
+    warmup: Optional[int] = None,
+    iters: Optional[int] = None,
+) -> List[CalibrationSample]:
+    """Measure every (matrix, schedule) pair.
+
+    mats        CSR matrices (or (tag, csr) pairs — tags are dropped).
+    measure     override objective ``(csr, schedule) -> seconds``.
+    """
+    from ..sparse.random import matrix_stats
+
+    if schedules is None:
+        schedules = candidate_schedules(n_dense_cols)
+    if measure is None:
+        def measure(csr, s):
+            return measure_schedule(csr, n_dense_cols, s,
+                                    warmup=warmup, iters=iters)
+
+    samples = []
+    for gi, m in enumerate(mats):
+        csr = m[1] if isinstance(m, tuple) else m
+        stats = matrix_stats(csr)
+        for s in schedules:
+            samples.append(CalibrationSample(
+                group=gi, terms=cost_terms(stats, s, n_dense_cols),
+                seconds=float(measure(csr, s))))
+    return samples
+
+
+def fit_weights(
+    samples: Sequence[CalibrationSample],
+) -> Tuple[float, float, float, float]:
+    """Non-negative least squares of measured seconds on the four terms.
+
+    Each matrix group is scaled by one scalar (its mean measured time),
+    applied to *both* the terms rows and the target, so every matrix
+    votes with comparable residual weight while an exactly-linear
+    relationship stays exactly solvable (the model only ever ranks
+    schedules within one matrix, so relative fit is what matters).
+    """
+    if not samples:
+        raise ValueError("no calibration samples")
+    groups = sorted({s.group for s in samples})
+    rows, targets = [], []
+    for g in groups:
+        gs = [s for s in samples if s.group == g]
+        scale = np.mean([s.seconds for s in gs]) or 1.0
+        for s in gs:
+            rows.append(np.asarray(s.terms, np.float64) / scale)
+            targets.append(s.seconds / scale)
+    a = np.asarray(rows)
+    t = np.asarray(targets)
+    try:
+        from scipy.optimize import nnls
+
+        w, _ = nnls(a, t)
+    except ImportError:  # pragma: no cover - scipy is in the image
+        w, *_ = np.linalg.lstsq(a, t, rcond=None)
+        w = np.clip(w, 0.0, None)
+    if not np.any(w > 0):
+        # degenerate fit (e.g. constant timings): keep the prior
+        return get_cost_weights()
+    # scale is irrelevant for argmin; normalize so work weight ~ 1
+    ref = w[0] if w[0] > 0 else np.max(w)
+    return tuple(float(x / ref) for x in w)
+
+
+def model_regret(samples: Sequence[CalibrationSample],
+                 weights: Sequence[float]) -> float:
+    """Geomean over matrices of measured(model argmin) / measured(best).
+    1.0 means the weighted model always picks the empirical winner."""
+    w = np.asarray(weights, np.float64)
+    ratios = []
+    for g in sorted({s.group for s in samples}):
+        gs = [s for s in samples if s.group == g]
+        costs = np.asarray([np.dot(w, s.terms) for s in gs])
+        secs = np.asarray([s.seconds for s in gs])
+        ratios.append(secs[int(np.argmin(costs))] / secs.min())
+    return float(np.exp(np.mean(np.log(np.maximum(ratios, 1e-12)))))
+
+
+def calibrate(
+    mats: Sequence,
+    n_dense_cols: int = 4,
+    *,
+    apply: bool = False,
+    measure: Optional[Callable] = None,
+    warmup: Optional[int] = None,
+    iters: Optional[int] = None,
+) -> CalibrationResult:
+    """Collect samples over ``mats``, fit weights, report regret before
+    (active weights) vs after (fitted); ``apply=True`` installs the fit
+    process-wide via ``set_cost_weights``."""
+    samples = collect_samples(mats, n_dense_cols, measure=measure,
+                              warmup=warmup, iters=iters)
+    before = model_regret(samples, get_cost_weights())
+    weights = fit_weights(samples)
+    after = model_regret(samples, weights)
+    if after > before:
+        # never ship a fit that ranks worse than the prior on its own data
+        weights, after = get_cost_weights(), before
+    if apply:
+        set_cost_weights(weights)
+    return CalibrationResult(weights=weights, regret_before=before,
+                             regret_after=after, n_samples=len(samples))

@@ -1,0 +1,131 @@
+"""Measurement layer shared by the autotuner and the benchmark harness.
+
+``time_fn`` is the single wall-clock timer in the repo — the paper-table
+benchmarks (``benchmarks/_util``) re-export it from here, and the tuner
+(``tune.search``) calls it directly, so a tuned number and a benchmarked
+number come from the same instrument.  The iteration count is
+env-tunable (``REPRO_BENCH_ITERS`` / ``REPRO_BENCH_WARMUP``) so CI smoke
+runs can trade variance for wall time.
+
+The schedule runners build a jitted pure-JAX analogue of each kernel
+schedule — XLA compiles a genuinely different program per schedule point
+(group size, strategy, tiling all change the compiled structure), so
+relative effects track the paper's axes; absolute numbers are
+backend-specific (DESIGN.md changed assumption 5).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import GroupReduceStrategy, Schedule, segment_group_reduce
+from ..kernels import ref
+
+__all__ = [
+    "bench_iters",
+    "bench_warmup",
+    "time_fn",
+    "make_eb_runner",
+    "make_rb_runner",
+    "make_runner",
+    "measure_schedule",
+]
+
+
+def bench_iters(default: int = 7) -> int:
+    """Timing iterations per measurement; override with REPRO_BENCH_ITERS
+    (CI smoke sets a small value to stay under its time budget)."""
+    return max(1, int(os.environ.get("REPRO_BENCH_ITERS", default)))
+
+
+def bench_warmup(default: int = 2) -> int:
+    return max(0, int(os.environ.get("REPRO_BENCH_WARMUP", default)))
+
+
+def time_fn(fn, *args, warmup: int | None = None,
+            iters: int | None = None) -> float:
+    """Median seconds/call of a jitted fn (blocks on results).
+
+    ``REPRO_BENCH_ITERS`` / ``REPRO_BENCH_WARMUP`` supply defaults and
+    *cap* explicit arguments, so CI smoke bounds total bench time without
+    touching call sites."""
+    if warmup is None:
+        warmup = bench_warmup()
+    elif "REPRO_BENCH_WARMUP" in os.environ:
+        warmup = min(warmup, bench_warmup())
+    if iters is None:
+        iters = bench_iters()
+    elif "REPRO_BENCH_ITERS" in os.environ:
+        iters = max(1, min(iters, bench_iters()))
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+# ------------------------------------------------------------------------
+# Schedule executor: pure-JAX analogue of each kernel schedule, jitted so
+# XLA compiles a genuinely different program per schedule point.
+# ------------------------------------------------------------------------
+
+
+def _dense_b(csr, n_dense):
+    return jax.random.normal(jax.random.PRNGKey(0), (csr.shape[1], n_dense))
+
+
+def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
+                   nnz_tile: int = 256):
+    g = csr.grouped(max(nnz_tile, group_size))
+    n_rows = csr.shape[0]
+
+    def run(rows, cols, vals, b):
+        partial = vals[:, None].astype(jnp.float32) * jnp.take(
+            b.astype(jnp.float32), cols, axis=0)
+        if strategy == GroupReduceStrategy.ACCUMULATE.value:
+            return jax.ops.segment_sum(partial, rows, num_segments=n_rows)
+        # any registered strategy name dispatches through the registry
+        return segment_group_reduce(partial, rows, n_rows,
+                                    group_size=group_size, strategy=strategy)
+
+    fn = jax.jit(run)
+    args = (g.rows, g.cols, g.vals, _dense_b(csr, n_dense))
+    return fn, args
+
+
+def make_rb_runner(csr, n_dense, *, row_tile: int = 8,
+                   width: int | None = None):
+    ell = csr.ell(row_tile=row_tile, width=width)
+    n_rows = csr.shape[0]
+
+    def run(ecols, evals, b):
+        return ref.spmm_ell_ref(ecols, evals, b, n_rows)
+
+    fn = jax.jit(run)
+    args = (ell.cols, ell.vals, _dense_b(csr, n_dense))
+    return fn, args
+
+
+def make_runner(csr, n_dense: int, sched: Schedule):
+    """Runner for an arbitrary :class:`Schedule` (dispatch on kernel)."""
+    if sched.kernel == "eb":
+        return make_eb_runner(csr, n_dense, group_size=sched.group_size,
+                              strategy=sched.strategy,
+                              nnz_tile=sched.nnz_tile)
+    return make_rb_runner(csr, n_dense, row_tile=sched.row_tile)
+
+
+def measure_schedule(csr, n_dense: int, sched: Schedule, *,
+                     warmup: int | None = None,
+                     iters: int | None = None) -> float:
+    """Seconds/call of ``sched`` applied to ``csr @ B`` with ``n_dense``
+    dense columns — the tuner's objective function."""
+    fn, args = make_runner(csr, n_dense, sched)
+    return time_fn(fn, *args, warmup=warmup, iters=iters)

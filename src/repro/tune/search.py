@@ -1,0 +1,311 @@
+"""Empirical schedule search over the atomic-parallelism space.
+
+The paper's dgSPARSE result (1.6x–2.3x, Table 4) comes from *tuning*
+``<groupSz, blockSz, tileSz, workerDim>``, not from a fixed heuristic.
+:func:`tune_schedule` makes that search a library call:
+
+1. **warm start** — rank :func:`~repro.core.candidate_schedules` by the
+   static cost model (:func:`~repro.core.predict_cost`), prune points
+   whose working set overflows VMEM;
+2. **measure** — time the top-k candidates plus the selector's own pick
+   (``Schedule.auto`` is always in the measured pool, so the tuned
+   choice can never lose to it beyond timing noise);
+3. **hillclimb** — take x2 / /2 steps on ``group_size`` and the tile
+   fields around the measured winner until no neighbor improves;
+4. **cache** — persist the winner in the :class:`~.cache.ScheduleCache`
+   under the matrix fingerprint, so serving/training loops tune once and
+   replay (a hit performs *zero* measurements).
+
+``measure=`` is injectable (schedule -> seconds) for tests and for
+calibration replays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..core import Schedule, candidate_schedules, predict_cost, select_schedule
+from ..kernels.ops import schedule_fits_vmem
+from ..sparse.random import matrix_stats
+from .cache import ScheduleCache, TuneRecord, cache_key, default_cache
+from .measure import measure_schedule, time_fn
+
+__all__ = [
+    "TuneResult",
+    "cached_or_auto",
+    "schedule_key",
+    "tune_schedule",
+    "tune_segment_reduce",
+]
+
+
+def schedule_key(s: Schedule) -> str:
+    """Stable string identity of a schedule point (JSON-safe dict key)."""
+    tile = s.nnz_tile if s.kernel == "eb" else s.row_tile
+    return f"{s.kernel}:t{tile}:c{s.col_tile}:G{s.group_size}:{s.strategy}"
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one tuning run (or cache replay)."""
+
+    schedule: Schedule
+    us_per_call: float
+    from_cache: bool
+    key: str
+    measured: Dict[str, float]  # schedule_key -> us/call this run
+
+    @property
+    def n_measurements(self) -> int:
+        return 0 if self.from_cache else len(self.measured)
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation
+# ---------------------------------------------------------------------------
+
+_MIN_TILE, _MAX_NNZ_TILE = 32, 2048
+_MAX_ROW_TILE = 128
+
+
+def _neighbors(s: Schedule) -> List[Schedule]:
+    """x2 / /2 moves on the tunable axes, respecting the divisibility and
+    range invariants ``Schedule.__post_init__`` enforces.
+
+    Only axes the measurement objective can observe are searched: the
+    jitted schedule analogues (``tune.measure``) compile differently per
+    group_size / strategy / nnz_tile / row_tile, but are invariant to
+    ``col_tile`` (they run the full dense width in one program), so a
+    col_tile move would be selected by pure timing noise — col_tile
+    stays at the candidate grid's data-aware value instead."""
+    out = []
+
+    def _try(**kw):
+        try:
+            out.append(s.replace(**kw))
+        except ValueError:
+            pass
+
+    if s.kernel == "eb":
+        for g in (s.group_size * 2, s.group_size // 2):
+            if 1 <= g <= s.nnz_tile and g != s.group_size:
+                _try(group_size=g)
+        for t in (s.nnz_tile * 2, s.nnz_tile // 2):
+            if (max(_MIN_TILE, s.group_size) <= t <= _MAX_NNZ_TILE
+                    and t != s.nnz_tile):
+                _try(nnz_tile=t)
+    else:
+        for rt in (s.row_tile * 2, s.row_tile // 2):
+            if 1 <= rt <= _MAX_ROW_TILE and rt != s.row_tile:
+                _try(row_tile=rt)
+    return out
+
+
+def _feasible(cands: List[Schedule], stats: dict) -> List[Schedule]:
+    kept = [s for s in cands
+            if schedule_fits_vmem(s, n_rows=stats["n_rows"],
+                                  n_cols=stats["n_cols"],
+                                  row_max=stats["row_max"])]
+    return kept or cands  # never let pruning empty the pool
+
+
+class _Memo:
+    """Measure-at-most-once memo over schedule points (shared by both
+    tuners): ``memo(s)`` returns us/call, measuring on first sight."""
+
+    def __init__(self, measure: Callable[[Schedule], float]):
+        self._measure = measure
+        self.timings: Dict[str, float] = {}
+
+    def __call__(self, s: Schedule) -> float:
+        k = schedule_key(s)
+        if k not in self.timings:
+            self.timings[k] = float(self._measure(s)) * 1e6
+        return self.timings[k]
+
+    def seen(self, s: Schedule) -> bool:
+        return schedule_key(s) in self.timings
+
+
+def _persist(cache: ScheduleCache, key: str, best: Schedule,
+             memo: _Memo) -> TuneResult:
+    """Record the winner and write the cache through (shared epilogue)."""
+    result = TuneResult(schedule=best, us_per_call=memo(best),
+                        from_cache=False, key=key,
+                        measured=dict(memo.timings))
+    cache.put(key, TuneRecord(schedule=best, us_per_call=result.us_per_call,
+                              measured=result.measured))
+    cache.save()
+    return result
+
+
+def _replay(cache: ScheduleCache, key: str) -> Optional[TuneResult]:
+    rec = cache.get(key)
+    if rec is None:
+        return None
+    return TuneResult(schedule=rec.schedule, us_per_call=rec.us_per_call,
+                      from_cache=True, key=key, measured={})
+
+
+# ---------------------------------------------------------------------------
+# The tuner
+# ---------------------------------------------------------------------------
+
+
+def tune_schedule(
+    csr,
+    n_dense_cols: int,
+    *,
+    cache: Optional[ScheduleCache] = None,
+    top_k: int = 4,
+    hill_steps: int = 3,
+    measure: Optional[Callable[[Schedule], float]] = None,
+    warmup: Optional[int] = None,
+    iters: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> TuneResult:
+    """Empirically pick the best schedule for ``csr @ B`` (B with
+    ``n_dense_cols`` columns); see the module docstring for the phases.
+
+    cache       ScheduleCache to consult/update (default: the process
+                cache at ``REPRO_TUNE_CACHE``); a hit replays with zero
+                measurements.
+    top_k       cost-model-ranked candidates to measure beyond the
+                selector's pick.
+    hill_steps  max hillclimb rounds around the measured winner.
+    measure     override objective ``schedule -> seconds`` (tests,
+                calibration replays); default wall-clocks the jitted
+                schedule analogue via ``tune.measure``.
+    """
+    if cache is None:
+        cache = default_cache()
+    key = cache_key(csr, n_dense_cols, backend)
+    hit = _replay(cache, key)
+    if hit is not None:
+        return hit
+
+    stats = matrix_stats(csr)
+    if measure is None:
+        def measure(s: Schedule) -> float:
+            return measure_schedule(csr, n_dense_cols, s,
+                                    warmup=warmup, iters=iters)
+
+    ranked = sorted(_feasible(candidate_schedules(n_dense_cols), stats),
+                    key=lambda s: predict_cost(stats, s, n_dense_cols))
+    pool: List[Schedule] = [select_schedule(stats, n_dense_cols)]
+    for s in ranked:
+        if len(pool) > top_k:
+            break
+        if s not in pool:
+            pool.append(s)
+    # kernel-family diversity: the cost model can rank one family's whole
+    # grid above the other's, but hillclimb only explores *within* a
+    # family — seed the pool with the best-ranked point of each kernel so
+    # the measured search can cross the eb/rb boundary.
+    for kernel in ("eb", "rb"):
+        fam = next((s for s in ranked if s.kernel == kernel), None)
+        if fam is not None and not any(s.kernel == kernel for s in pool):
+            pool.append(fam)
+
+    memo = _Memo(measure)
+    best = min(pool, key=memo)
+
+    for _ in range(hill_steps):
+        nbs = [s for s in _feasible(_neighbors(best), stats)
+               if not memo.seen(s)]
+        if not nbs:
+            break
+        contender = min(nbs, key=memo)
+        if memo(contender) >= memo(best):
+            break
+        best = contender
+
+    return _persist(cache, key, best, memo)
+
+
+def cached_or_auto(csr, n_dense_cols: int, *,
+                   cache: Optional[ScheduleCache] = None,
+                   backend: Optional[str] = None,
+                   key: Optional[str] = None) -> Schedule:
+    """Cache-hit schedule if one exists, else the static selector's pick —
+    **never measures**.  This is the serving-path resolver: a latency-
+    sensitive loop consults tuning done ahead of time (e.g. by
+    ``ServeEngine.prepare_sparse`` or ``launch.hillclimb --spmm``) and
+    must not stall a request on a tuning run."""
+    if cache is None:
+        cache = default_cache()
+    rec = cache.get(key if key is not None
+                    else cache_key(csr, n_dense_cols, backend))
+    if rec is not None:
+        return rec.schedule
+    return Schedule.auto(matrix_stats(csr), n_dense_cols)
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce tuning (no CSR matrix: segments play the role of rows)
+# ---------------------------------------------------------------------------
+
+
+def tune_segment_reduce(
+    seg_ids,
+    n_cols: int,
+    num_segments: int,
+    *,
+    cache: Optional[ScheduleCache] = None,
+    measure: Optional[Callable[[Schedule], float]] = None,
+    warmup: Optional[int] = None,
+    iters: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> TuneResult:
+    """Tune (tile, group_size, strategy) for a standalone segment reduce.
+
+    The segment-length histogram stands in for the row-length histogram
+    in the fingerprint (keys prefixed ``segred:``); candidates are the
+    EB half of the grid (the RB kernel has no segment-reduce analogue).
+    The objective times the *actual* segment-reduce kernel wrapper —
+    unlike SpMM tuning there is no cheaper analogue that still observes
+    the tile axis, and the kernel is the op being tuned."""
+    from .cache import fingerprint_from_lengths
+
+    seg = np.asarray(seg_ids)
+    t = int(seg.shape[0])
+    lengths = np.bincount(seg, minlength=max(num_segments, 1))
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    fp = fingerprint_from_lengths(lengths, (num_segments, n_cols), t)
+    key = f"segred:{fp}|N{n_cols}|{backend}"
+
+    if cache is None:
+        cache = default_cache()
+    hit = _replay(cache, key)
+    if hit is not None:
+        return hit
+
+    if measure is None:
+        import jax
+        import jax.numpy as jnp
+
+        from ..kernels.segment_reduce import segment_reduce as _segred
+
+        data = jax.random.normal(jax.random.PRNGKey(0), (t, n_cols))
+        seg_j = jnp.asarray(seg, jnp.int32)
+
+        def measure(s: Schedule) -> float:
+            def fn(ss, d):
+                return _segred(ss, d, num_segments=num_segments,
+                               tile=s.nnz_tile, group_size=s.group_size,
+                               strategy=s.strategy)
+
+            return time_fn(fn, seg_j, data, warmup=warmup, iters=iters)
+
+    memo = _Memo(measure)
+    pool = [Schedule("eb", nnz_tile=tile, group_size=g, strategy=st)
+            for tile in (128, 512)
+            for g in (8, 32)
+            for st in ("segment", "accumulate")]
+    best = min(pool, key=memo)
+    return _persist(cache, key, best, memo)

@@ -5,7 +5,6 @@ import os
 import pathlib
 import subprocess
 import sys
-import textwrap
 
 import jax
 import pytest
