@@ -1,0 +1,152 @@
+"""Bench-artifact regression diff (ISSUE 3 satellite).
+
+Compares two ``BENCH_<tag>.json`` artifacts (as written by
+``benchmarks.run --json``) and exits non-zero when the new run regresses
+past a threshold.  Two signals are checked:
+
+* **us_per_call geomeans** per row group (default group: ``table5``):
+  geomean over the names both artifacts share; regression when
+  ``new/old > 1 + threshold``;
+* **derived geomean metrics** — ``derived`` fields carry
+  ``<key>_geomean=<x>`` ratios.  Only the *win* ratios
+  (``tuned_vs_auto_geomean``, ``tuned_vs_default_geomean`` — higher is
+  better) gate, failing when ``new < old * (1 - threshold)``; other
+  geomean keys (e.g. the ``*_vs_oracle`` slowdown ratios, where lower
+  is better) are reported informationally but never fail.  The tuner
+  gaps gate through win ratios rather than absolute wall clock: a ratio
+  is measured within one run on one machine, so it survives the
+  runner-to-runner CPU variance that makes absolute us comparisons
+  across CI runs noisy.
+
+Runs standalone (stdlib only) so CI and local use are the same command:
+
+    python benchmarks/diff.py old.json new.json --threshold 0.10
+
+Missing groups or no shared rows are reported and *skipped*, never
+failed — the first run of a fresh benchmark set must stay green.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+
+DEFAULT_GROUPS = ("table5",)
+
+# derived geomean keys where higher is better (gateable win ratios);
+# anything else matched by the regex — e.g. auto_vs_oracle_geomean, a
+# slowdown ratio where LOWER is better — is reported but never gates
+GATED_GEOMEAN_KEYS = ("tuned_vs_auto_geomean", "tuned_vs_default_geomean")
+
+_GEOMEAN_RE = re.compile(r"([a-z0-9_/]*geomean)=([-+0-9.eE]+)")
+
+
+def load_bench(path: str) -> dict:
+    """``{name: {us_per_call, derived}}`` as ``benchmarks.run`` wrote it."""
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        raise ValueError(f"{path}: expected a JSON object of bench rows")
+    return data
+
+
+def _geomean(xs) -> float:
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def _us_rows(bench: dict, group: str) -> dict:
+    out = {}
+    for name, row in bench.items():
+        us = (row or {}).get("us_per_call")
+        if name.startswith(group) and isinstance(us, (int, float)) and us > 0:
+            out[name] = float(us)
+    return out
+
+
+def _derived_geomeans(bench: dict) -> dict:
+    """``{row_name/metric: value}`` for every ``*geomean=`` in derived."""
+    out = {}
+    for name, row in bench.items():
+        for key, val in _GEOMEAN_RE.findall(str((row or {}).get("derived"))):
+            try:
+                v = float(val)
+            except ValueError:
+                continue
+            if v > 0:
+                out[f"{name}:{key}"] = v
+    return out
+
+
+def compare(old: dict, new: dict, *, threshold: float = 0.10,
+            groups=DEFAULT_GROUPS) -> list:
+    """Findings as ``(kind, label, old, new, ratio, regressed)`` tuples.
+
+    kind 'us' ratios are new/old time (higher is worse); kind 'geomean'
+    ratios are new/old win ratio (lower is worse); kind 'info' is a
+    non-gating derived ratio (direction unknown, e.g. vs-oracle
+    slowdowns); kind 'skip' marks a group with no shared rows.
+    """
+    findings = []
+    for group in groups:
+        a, b = _us_rows(old, group), _us_rows(new, group)
+        shared = sorted(set(a) & set(b))
+        if not shared:
+            findings.append(("skip", group, None, None, None, False))
+            continue
+        g_old = _geomean([a[n] for n in shared])
+        g_new = _geomean([b[n] for n in shared])
+        ratio = g_new / g_old
+        findings.append(("us", f"{group} ({len(shared)} rows)",
+                         g_old, g_new, ratio, ratio > 1.0 + threshold))
+    d_old, d_new = _derived_geomeans(old), _derived_geomeans(new)
+    for key in sorted(set(d_old) & set(d_new)):
+        ratio = d_new[key] / d_old[key]
+        gated = key.rsplit(":", 1)[-1] in GATED_GEOMEAN_KEYS
+        findings.append(("geomean" if gated else "info", key,
+                         d_old[key], d_new[key], ratio,
+                         gated and ratio < 1.0 - threshold))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="previous BENCH json artifact")
+    ap.add_argument("new", help="current BENCH json artifact")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="fractional geomean regression that fails "
+                         "(default 0.10 = 10%%)")
+    ap.add_argument("--groups", default=",".join(DEFAULT_GROUPS),
+                    help="comma list of row-name prefixes to diff")
+    args = ap.parse_args(argv)
+
+    old = load_bench(args.old)
+    new = load_bench(args.new)
+    findings = compare(old, new, threshold=args.threshold,
+                       groups=tuple(g for g in args.groups.split(",") if g))
+
+    failed = False
+    print(f"bench diff: {args.old} -> {args.new} "
+          f"(threshold {args.threshold:.0%})")
+    for kind, label, a, b, ratio, regressed in findings:
+        if kind == "skip":
+            print(f"  SKIP  {label}: no shared rows")
+            continue
+        unit = "us" if kind == "us" else "x"
+        verdict = ("REGRESSED" if regressed
+                   else "info" if kind == "info" else "ok")
+        arrow = "slower" if kind == "us" else "ratio"
+        print(f"  {verdict:9s} {label}: {a:.3f}{unit} -> {b:.3f}{unit} "
+              f"({ratio:.3f} {arrow})")
+        failed |= regressed
+    if failed:
+        print("bench diff: FAIL (regression past threshold)",
+              file=sys.stderr)
+        return 1
+    print("bench diff: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

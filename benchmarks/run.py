@@ -20,7 +20,7 @@ def main() -> None:
                     help="larger matrices (slower, closer to paper scale)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
-                         "moe,selector")
+                         "moe,moe_tuner,selector")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write {name: {us_per_call, derived}} JSON")
     args = ap.parse_args()
@@ -35,9 +35,13 @@ def main() -> None:
         "table4": lambda: tables.table4_tuning(quick),
         "table5": lambda: tables.table5_dynamic_choice(quick),
         "moe": lambda: beyond.moe_dispatch(quick),
+        "moe_tuner": lambda: beyond.moe_tuner_gap(quick),
         "selector": lambda: beyond.selector_quality(quick),
     }
     wanted = args.only.split(",") if args.only else list(benches)
+    unknown = [w for w in wanted if w not in benches]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; have {sorted(benches)}")
 
     print("name,us_per_call,derived")
     results = {}

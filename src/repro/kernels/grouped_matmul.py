@@ -25,6 +25,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def fit_tile(n: int, tile: int) -> int:
+    """Largest power-of-two shrink of ``tile`` that divides ``n`` —
+    ``grouped_matmul`` requires exact blocking of the D/F axes, and
+    halving preserves the power-of-two grid.  Shared by the dispatch
+    path (``models.moe``) and the tuner (``tune.moe``) so both agree on
+    what a legal tile is."""
+    t = max(1, min(tile, n))
+    while n % t and t > 1:
+        t //= 2
+    return t
+
+
 def _gmm_kernel(emap_ref, x_ref, w_ref, out_ref):
     del emap_ref  # consumed by the index maps
     @pl.when(pl.program_id(2) == 0)

@@ -3,6 +3,11 @@ variants and print before/after roofline terms.
 
     PYTHONPATH=src python -m repro.launch.hillclimb [--cell arch:shape:tag]
     PYTHONPATH=src python -m repro.launch.hillclimb --spmm [--n-dense 4]
+    PYTHONPATH=src python -m repro.launch.hillclimb --moe
+
+``--moe`` does the same for the MoE grouped-matmul dispatch space
+(token_tile × capacity × f_tile × d_tile, keyed by the expert-segment
+histogram) — populating the per-backend cache ahead of serving.
 
 ``--spmm`` hillclimbs *schedules* instead of cfg knobs: it runs the
 empirical autotuner (``repro.tune``) over the synthetic matrix suite,
@@ -102,6 +107,52 @@ def spmm_hillclimb(n_dense: int = 4, quick: bool = True):
           f"({len(cache)} records in {cache.path})")
 
 
+def moe_hillclimb(quick: bool = True):
+    """Tune MoE dispatch schedules for representative expert histograms
+    (balanced and skewed routing) through the persistent per-backend
+    cache; print default-vs-tuned per cell and the geomean win.  Serving
+    (``ServeEngine.moe_dispatch_schedule``) picks the results up from
+    the same cache with zero measurements."""
+    import numpy as np
+
+    from repro.configs import ARCHS, smoke_config
+    from repro.models.moe import (balanced_expert_lengths, default_dispatch,
+                                  moe_tune_dispatch, skewed_expert_lengths)
+    from repro.tune import default_cache
+    from repro.tune.moe import measure_moe_dispatch, moe_schedule_key
+
+    cfg = smoke_config(ARCHS["qwen3-moe-235b-a22b"]).scaled(
+        d_model=128 if quick else 256, moe_d_ff=128 if quick else 512,
+        n_experts=8, experts_per_token=2)
+    cache = default_cache()
+    cells = []
+    for t in ((512,) if quick else (512, 2048)):
+        cells.append((f"balanced_t{t}", t, balanced_expert_lengths(cfg, t)))
+        cells.append((f"skewed_t{t}", t, skewed_expert_lengths(cfg, t)))
+
+    wins = []
+    for name, t, lengths in cells:
+        res = moe_tune_dispatch(cfg, t, expert_lengths=lengths, cache=cache)
+        base = default_dispatch(cfg)
+        # the default is always in the tuner's measured pool; only a
+        # cache-hit replay (which measured nothing) times it afresh
+        t_base = res.measured.get(moe_schedule_key(base))
+        if t_base is None:
+            t_base = measure_moe_dispatch(
+                lengths, cfg.d_model, cfg.moe_d_ff, base,
+                dtype=str(cfg.param_dtype), max_tokens=t) * 1e6
+        wins.append(t_base / max(res.us_per_call, 1e-9))
+        src = "cache" if res.from_cache else f"{res.n_measurements} meas"
+        print(f"--- moe {name} E={cfg.n_experts} D={cfg.d_model} "
+              f"F={cfg.moe_d_ff} [{src}] ---")
+        print(f"  default {base}: {t_base:9.1f} us")
+        print(f"  tuned   {res.schedule}: {res.us_per_call:9.1f} us "
+              f"({wins[-1]:.2f}x)")
+    print(f"geomean tuned-vs-default: "
+          f"{float(np.exp(np.mean(np.log(np.maximum(wins, 1e-9))))):.3f}x "
+          f"({len(cache)} records in {cache.path})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", action="append", default=None,
@@ -109,12 +160,18 @@ def main():
     ap.add_argument("--spmm", action="store_true",
                     help="hillclimb sparse schedules via the autotuner "
                          "(populates the persistent tuner cache)")
+    ap.add_argument("--moe", action="store_true",
+                    help="tune MoE grouped-matmul dispatch schedules "
+                         "(populates the same per-backend tuner cache)")
     ap.add_argument("--n-dense", type=int, default=4)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
     if args.spmm:
         spmm_hillclimb(args.n_dense, quick=not args.full)
+        return
+    if args.moe:
+        moe_hillclimb(quick=not args.full)
         return
 
     # roofline mode: importing .dryrun forces the 512-device host platform

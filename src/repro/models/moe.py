@@ -52,16 +52,20 @@ def init_moe(cfg, key):
     }
 
 
-def _capacity(cfg, t_local: int) -> int:
-    cap = int(t_local * cfg.experts_per_token * cfg.capacity_factor
-              / cfg.n_experts)
+def _capacity(cfg, t_local: int, factor: float | None = None) -> int:
+    if factor is None:
+        factor = cfg.capacity_factor
+    cap = int(t_local * cfg.experts_per_token * factor / cfg.n_experts)
     return min(max(8, cap), t_local)
 
 
-def _expert_ffn(cfg, x, wg, wi, wo, gates, capacity, use_pallas):
+def _expert_ffn(cfg, x, wg, wi, wo, gates, capacity, use_pallas,
+                dispatch=None):
     """Local computation: x (T, D) tokens; wg/wi/wo (E_loc, D, F)/(E_loc, F,
     D); gates (T, E_loc) combine weights (0 when not routed). Returns the
-    partial output (T, D) for these experts."""
+    partial output (T, D) for these experts.  ``dispatch`` (a
+    ``repro.tune.MoeDispatchSchedule``) overrides the static tile
+    defaults of the Pallas path; ``None`` keeps them."""
     t, d = x.shape
     e_loc = wg.shape[0]
     # per-expert capacity selection: top-C tokens by gate weight. Tokens
@@ -71,9 +75,13 @@ def _expert_ffn(cfg, x, wg, wi, wo, gates, capacity, use_pallas):
     xg = jnp.take(x, topi.reshape(-1), axis=0).reshape(e_loc, capacity, d)
 
     if use_pallas:
-        from ..kernels.grouped_matmul import grouped_matmul
+        from ..kernels.grouped_matmul import fit_tile, grouped_matmul
 
-        tile = min(capacity, 128)
+        f = wg.shape[-1]
+        tt = dispatch.token_tile if dispatch is not None else 128
+        dt = fit_tile(d, dispatch.d_tile if dispatch is not None else 128)
+        ft = fit_tile(f, dispatch.f_tile if dispatch is not None else 128)
+        tile = min(capacity, tt)
         cap_pad = ((capacity + tile - 1) // tile) * tile
         if cap_pad != capacity:
             xg = jnp.pad(xg, ((0, 0), (0, cap_pad - capacity), (0, 0)))
@@ -81,16 +89,16 @@ def _expert_ffn(cfg, x, wg, wi, wo, gates, capacity, use_pallas):
         tile_experts = jnp.repeat(jnp.arange(e_loc, dtype=jnp.int32),
                                   tiles_per_e)
         flat = xg.reshape(e_loc * cap_pad, d)
-        f = wg.shape[-1]
 
-        def gmm(x_, w_):
-            return grouped_matmul(
-                x_, tile_experts, w_, token_tile=tile,
-                d_tile=min(128, x_.shape[1]), f_tile=min(128, w_.shape[-1]))
+        def gmm(x_, w_, contract_tile, out_tile):
+            return grouped_matmul(x_, tile_experts, w_, token_tile=tile,
+                                  d_tile=contract_tile, f_tile=out_tile)
 
-        h = jax.nn.silu(gmm(flat, wg)) * gmm(flat, wi)
-        del f
-        y = gmm(h.astype(x.dtype), wo)
+        # the up-projections contract D and emit F; the down-projection
+        # contracts F and emits D — tiles are passed per role, never
+        # inferred from shapes (d == f would make that ambiguous)
+        h = jax.nn.silu(gmm(flat, wg, dt, ft)) * gmm(flat, wi, dt, ft)
+        y = gmm(h.astype(x.dtype), wo, ft, dt)
         y = y.reshape(e_loc, cap_pad, d)[:, :capacity]
     else:
         h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, wg)) * jnp.einsum(
@@ -122,23 +130,28 @@ def _aux_loss(cfg, gates, probs):
     return cfg.n_experts * jnp.sum(f * p)
 
 
-def apply_moe(cfg, p, x2d, ctx: ShardingCtx | None = None):
+def apply_moe(cfg, p, x2d, ctx: ShardingCtx | None = None, *,
+              dispatch=None):
     """x2d: (T, D) tokens (sharded over data axes under ctx). Returns
-    (out (T, D), aux_loss scalar)."""
+    (out (T, D), aux_loss scalar).  ``dispatch`` (a
+    ``repro.tune.MoeDispatchSchedule``, e.g. from
+    :func:`moe_tune_dispatch`) replaces the static token-tile/capacity
+    defaults; ``None`` keeps the config's static choice."""
     use_pallas = cfg.moe_pallas_dispatch
+    cap_factor = dispatch.capacity_factor if dispatch is not None else None
 
     if ctx is None or ctx.mesh is None or ctx.model_axis is None:
         gates, probs = _route(cfg, x2d, p["router"])
-        cap = _capacity(cfg, x2d.shape[0])
+        cap = _capacity(cfg, x2d.shape[0], cap_factor)
         out = _expert_ffn(cfg, x2d, p["wg"], p["wi"], p["wo"], gates, cap,
-                          use_pallas)
+                          use_pallas, dispatch)
         return out.astype(x2d.dtype), _aux_loss(cfg, gates, probs)
 
     mesh = ctx.mesh
     dax, max_ = ctx.data_axes, ctx.model_axis
     t_local = x2d.shape[0] // int(
         functools.reduce(lambda a, b: a * b, (mesh.shape[a] for a in dax), 1))
-    cap = _capacity(cfg, t_local)
+    cap = _capacity(cfg, t_local, cap_factor)
 
     @functools.partial(
         jax.shard_map, mesh=mesh,
@@ -152,7 +165,8 @@ def apply_moe(cfg, p, x2d, ctx: ShardingCtx | None = None):
         sl = m_idx * e_loc
         gates_loc = jax.lax.dynamic_slice(
             gates, (0, sl), (gates.shape[0], e_loc))
-        part = _expert_ffn(cfg, x, wg, wi, wo, gates_loc, cap, use_pallas)
+        part = _expert_ffn(cfg, x, wg, wi, wo, gates_loc, cap, use_pallas,
+                           dispatch)
         out = jax.lax.psum(part, max_)  # atomic-style collective writeback
         aux = _aux_loss(cfg, gates, probs)
         aux = jax.lax.pmean(aux, dax) if dax else aux
@@ -160,3 +174,103 @@ def apply_moe(cfg, p, x2d, ctx: ShardingCtx | None = None):
         return out.astype(x.dtype), aux
 
     return _sharded(x2d, p["router"], p["wg"], p["wi"], p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Empirical dispatch tuning (repro.tune.moe wired to this model)
+# ---------------------------------------------------------------------------
+
+
+def default_dispatch(cfg):
+    """The static dispatch point ``apply_moe(dispatch=None)`` uses: the
+    config's capacity factor with 128-wide tiles.  The tuner's baseline —
+    a tuned schedule is never slower than this on the measured configs."""
+    from ..tune.moe import MoeDispatchSchedule
+
+    return MoeDispatchSchedule(capacity_factor=cfg.capacity_factor)
+
+
+def expert_lengths_from_gates(gates) -> "jnp.ndarray":
+    """Expert-segment histogram of a routing decision: routed tokens per
+    expert from the dense (T, E) gate matrix (zeros off the top-k)."""
+    return (gates > 0).sum(axis=0)
+
+
+def balanced_expert_lengths(cfg, t_tokens: int):
+    """The histogram a perfectly load-balanced router would produce —
+    the tuning default when no observed routing is supplied."""
+    import numpy as np
+
+    total = t_tokens * cfg.experts_per_token
+    base, extra = divmod(total, cfg.n_experts)
+    lengths = np.full(cfg.n_experts, base, np.int64)
+    lengths[:extra] += 1
+    return lengths
+
+
+def skewed_expert_lengths(cfg, t_tokens: int, *, a: float = 1.5,
+                          seed: int = 0):
+    """A Zipf-skewed routing histogram — the representative hot-expert
+    workload both ``launch.hillclimb --moe`` and the
+    ``beyond/moe_tuner_gap`` benchmark tune (one definition, so the
+    offline cache-population tool and the tracked benchmark stay on the
+    same cells)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    w = rng.zipf(a, cfg.n_experts).astype(np.float64)
+    total = t_tokens * cfg.experts_per_token
+    return np.maximum(w / w.sum() * total, 1).astype(np.int64)
+
+
+def moe_tune_dispatch(cfg, t_tokens: int, *, expert_lengths=None,
+                      cache=None, measure=None, warmup=None, iters=None,
+                      backend=None, **kw):
+    """Empirically tune this config's dispatch schedule for ``t_tokens``
+    local tokens (``repro.tune.tune_moe_dispatch`` keyed by the
+    expert-segment histogram).  ``expert_lengths`` is the observed
+    routed-tokens-per-expert histogram (e.g.
+    ``expert_lengths_from_gates``); default assumes balanced routing.
+    Returns a :class:`~repro.tune.TuneResult` whose ``.schedule`` plugs
+    into ``apply_moe(..., dispatch=...)``; a repeat call with the same
+    histogram replays the per-backend cache with zero measurements.
+
+    When no histogram is supplied the balanced assumption stands in —
+    and capacity shrinking is withheld (the drop constraint is only
+    trustworthy on *observed* routing; a sub-default capacity that is
+    free on the balanced histogram drops tokens on a skewed live
+    batch)."""
+    import numpy as np
+
+    from ..tune.moe import tune_moe_dispatch as _tune
+
+    kw.setdefault("allow_capacity_shrink", expert_lengths is not None)
+    kw.setdefault("max_tokens", t_tokens)
+    if expert_lengths is None:
+        expert_lengths = balanced_expert_lengths(cfg, t_tokens)
+    return _tune(np.asarray(expert_lengths), cfg.d_model, cfg.moe_d_ff,
+                 dtype=str(cfg.param_dtype), default=default_dispatch(cfg),
+                 cache=cache, measure=measure, warmup=warmup, iters=iters,
+                 backend=backend, **kw)
+
+
+def moe_dispatch_schedule(cfg, t_tokens: int, *, expert_lengths=None,
+                          cache=None, backend=None):
+    """Measurement-free resolver: the tuned dispatch for this config's
+    histogram if the cache has one, else the static default.  Safe on a
+    serving path — never stalls on a tuning run.  Mirrors
+    :func:`moe_tune_dispatch`'s keying: an assumed (``None``) histogram
+    resolves only no-shrink records."""
+    import numpy as np
+
+    from ..tune.moe import moe_cached_or_default
+
+    observed = expert_lengths is not None
+    if expert_lengths is None:
+        expert_lengths = balanced_expert_lengths(cfg, t_tokens)
+    return moe_cached_or_default(np.asarray(expert_lengths), cfg.d_model,
+                                 cfg.moe_d_ff, dtype=str(cfg.param_dtype),
+                                 default=default_dispatch(cfg),
+                                 cache=cache, backend=backend,
+                                 allow_capacity_shrink=observed,
+                                 max_tokens=t_tokens)

@@ -69,6 +69,44 @@ class ServeEngine:
         self._sched_memo[cache_key(csr, n_dense_cols)] = sched
         return sched
 
+    def prepare_moe(self, cfg, t_tokens: int, expert_lengths=None):
+        """Ahead-of-time tuning of the MoE dispatch this engine will run:
+        measures (or replays the per-backend cache) the token-tile ×
+        capacity × (f_tile, d_tile) space for this config's expert
+        histogram, so :meth:`moe_dispatch_schedule` replays it for free."""
+        from ..models.moe import moe_tune_dispatch
+
+        res = moe_tune_dispatch(cfg, t_tokens,
+                                expert_lengths=expert_lengths,
+                                cache=self.tuner_cache)
+        self._sched_memo[res.key] = res.schedule
+        return res.schedule
+
+    def moe_dispatch_schedule(self, cfg, t_tokens: int,
+                              expert_lengths=None):
+        """Serving-path resolver for ``apply_moe(..., dispatch=...)``:
+        per-engine memo, then the persistent per-backend cache, else the
+        config's static default — never an inline measurement."""
+        import numpy as np
+
+        from ..models.moe import balanced_expert_lengths, moe_dispatch_schedule
+        from ..tune.moe import moe_cache_key
+
+        observed = expert_lengths is not None
+        lengths = np.asarray(expert_lengths if observed
+                             else balanced_expert_lengths(cfg, t_tokens))
+        # same keying as moe_tune_dispatch: assumed histograms resolve
+        # the no-shrink record only
+        key = moe_cache_key(lengths, cfg.d_model, cfg.moe_d_ff,
+                            str(cfg.param_dtype), shrink=observed,
+                            max_tokens=t_tokens)
+        sched = self._sched_memo.get(key)
+        if sched is None:
+            sched = moe_dispatch_schedule(cfg, t_tokens,
+                                          expert_lengths=expert_lengths,
+                                          cache=self.tuner_cache)
+        return sched
+
     def spmm(self, a, b):
         """Serving-path SpMM: schedule comes from the per-engine memo,
         then the persistent tuner cache, else the static selector —

@@ -8,17 +8,23 @@ persists the result in a fingerprint-keyed on-disk cache
 ``schedule="tune"`` on ``repro.sparse.spmm/sddmm/segment_reduce`` routes
 here; ``cached_or_auto`` is the measurement-free serving-path resolver;
 ``calibrate`` feeds measured timings back into ``Schedule.auto``'s cost
-model.  See DESIGN.md §6.
+model.  ``tune_moe_dispatch`` applies the same machinery to the MoE
+grouped-matmul dispatch space (token_tile × capacity × f/d tiles, keyed
+by the expert-segment histogram), and the cache is namespaced per
+backend + device kind so fleets ship pre-tuned files per hardware
+generation.  See DESIGN.md §6–§7.
 """
 from .cache import (  # noqa: F401
     SCHEMA_VERSION,
     ScheduleCache,
     TuneRecord,
     cache_key,
+    cache_namespace,
     default_cache,
     default_cache_path,
     fingerprint,
     fingerprint_from_lengths,
+    legacy_cache_path,
     set_default_cache,
 )
 from .calibrate import (  # noqa: F401
@@ -36,6 +42,16 @@ from .measure import (  # noqa: F401
     make_runner,
     measure_schedule,
     time_fn,
+)
+from .moe import (  # noqa: F401
+    MoeDispatchSchedule,
+    dropped_tokens,
+    measure_moe_dispatch,
+    moe_cache_key,
+    moe_cached_or_default,
+    moe_capacity,
+    moe_schedule_key,
+    tune_moe_dispatch,
 )
 from .search import (  # noqa: F401
     TuneResult,

@@ -1,25 +1,40 @@
-"""Persistent tuning cache keyed by a matrix fingerprint.
+"""Persistent tuning cache keyed by a workload fingerprint.
 
 A *fingerprint* summarizes the statistics the schedule space actually
 responds to — shape, nnz, row-length histogram quantiles and row-length
 CV — so two matrices with the same sparsity *profile* share a tuning
-record even if their patterns differ.  The cache key is
-``fingerprint × n_dense_cols × backend``: dense-column count changes the
-workload/balance trade-off (DA-SpMM's N axis) and timings never transfer
-across backends.
+record even if their patterns differ.  The same quantile machinery
+fingerprints MoE expert-segment histograms (``tune.moe``): skewed
+routing and balanced routing hash differently, which is exactly when the
+profitable token tile / capacity changes.
 
-Records serialize to a single JSON file (``REPRO_TUNE_CACHE`` or
+The cache is **namespaced per backend + device kind**: timings never
+transfer across backends, so instead of carrying the backend inside
+every key, each ``backend-devicekind`` combination gets its *own* cache
+file (``schedule_cache.<namespace>.json`` next to the configured path).
+Fleets can then ship a pre-tuned cache file per TPU/GPU generation and
+drop it in place.  A legacy single-file cache (schema written before the
+namespacing, keys suffixed ``|<backend>``) is migrated transparently on
+load: records whose backend component matches the namespace are folded
+in under their stripped key, and persisted on the next ``save``.
+
+Records serialize to JSON (base path ``REPRO_TUNE_CACHE`` or
 ``~/.cache/repro/schedule_cache.json``) with a schema version; a version
 mismatch drops the file (stale-schema records silently re-tune rather
 than crash).  ``ScheduleCache(path=None)`` is memory-only — used by
-benchmarks and tests that must not touch the user's cache.
+benchmarks and tests that must not touch the user's cache.  ``save()``
+holds an ``fcntl.flock`` over the merge-and-rewrite so two processes
+tuning against one file cannot interleave read-merge-write and drop
+each other's records (no-op on platforms without ``fcntl``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
 import pathlib
+import re
 import tempfile
 from typing import Dict, Optional
 
@@ -27,15 +42,22 @@ import numpy as np
 
 from ..core import Schedule
 
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
+
 __all__ = [
     "SCHEMA_VERSION",
     "TuneRecord",
     "ScheduleCache",
     "cache_key",
+    "cache_namespace",
     "default_cache",
     "default_cache_path",
     "fingerprint",
     "fingerprint_from_lengths",
+    "legacy_cache_path",
     "set_default_cache",
 ]
 
@@ -80,37 +102,43 @@ def fingerprint(csr) -> str:
     return cached("fingerprint", build) if cached is not None else build()
 
 
-def cache_key(csr, n_dense_cols: int, backend: str | None = None) -> str:
+def cache_key(csr, n_dense_cols: int) -> str:
+    """Key of an SpMM tuning record *within* a namespace cache.
+
+    The backend is **not** part of the key any more — it selects the
+    cache file (:func:`cache_namespace`), so one file's records are
+    mutually comparable by construction."""
+    return f"{fingerprint(csr)}|N{int(n_dense_cols)}"
+
+
+def cache_namespace(backend: str | None = None) -> str:
+    """``backend`` or ``backend-devicekind`` namespace for the cache
+    file, e.g. ``cpu``, ``tpu-v5e``, ``gpu-nvidia-a100``.  The device
+    kind is folded in because timings do not transfer across hardware
+    generations of one backend."""
+    import jax
+
     if backend is None:
-        import jax
-
         backend = jax.default_backend()
-    return f"{fingerprint(csr)}|N{int(n_dense_cols)}|{backend}"
+    try:
+        kind = jax.devices(backend)[0].device_kind
+    except RuntimeError:
+        # backend not initialisable here (e.g. naming a foreign backend
+        # to pre-load its shipped cache): namespace on the name alone
+        kind = backend
+    kind = re.sub(r"[^a-z0-9]+", "-", str(kind).lower()).strip("-")
+    backend = re.sub(r"[^a-z0-9]+", "-", str(backend).lower()).strip("-")
+    if kind == backend or not kind:
+        return backend
+    if kind.startswith(backend + "-"):
+        return kind
+    return f"{backend}-{kind}"
 
 
-@dataclasses.dataclass(frozen=True)
-class TuneRecord:
-    """One cached tuning outcome."""
-
-    schedule: Schedule
-    us_per_call: float
-    measured: Dict[str, float] = dataclasses.field(default_factory=dict)
-
-    def to_json(self) -> dict:
-        return {
-            "schedule": dataclasses.asdict(self.schedule),
-            "us_per_call": self.us_per_call,
-            "measured": self.measured,
-        }
-
-    @staticmethod
-    def from_json(d: dict) -> "TuneRecord":
-        return TuneRecord(schedule=Schedule(**d["schedule"]),
-                          us_per_call=float(d["us_per_call"]),
-                          measured=dict(d.get("measured", {})))
-
-
-def default_cache_path() -> pathlib.Path:
+def legacy_cache_path() -> pathlib.Path:
+    """The pre-namespacing single-file location (``REPRO_TUNE_CACHE``
+    itself, or the un-suffixed default path).  Only read for migration —
+    never written."""
     env = os.environ.get("REPRO_TUNE_CACHE")
     if env:
         return pathlib.Path(env)
@@ -119,65 +147,194 @@ def default_cache_path() -> pathlib.Path:
             / "repro" / "schedule_cache.json")
 
 
+def default_cache_path(namespace: str | None = None) -> pathlib.Path:
+    """Per-namespace cache file: the legacy base path with the namespace
+    spliced in before the suffix (``tune.json`` -> ``tune.cpu.json``)."""
+    base = legacy_cache_path()
+    if namespace is None:
+        namespace = cache_namespace()
+    suffix = base.suffix or ".json"
+    return base.with_name(f"{base.stem}.{namespace}{suffix}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecord:
+    """One cached tuning outcome.  ``schedule`` is either a
+    :class:`~repro.core.Schedule` (SpMM / segment-reduce records) or a
+    :class:`~repro.tune.moe.MoeDispatchSchedule` (``moe:``-prefixed
+    records); serialization dispatches on a ``kind`` tag."""
+
+    schedule: object
+    us_per_call: float
+    measured: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        from .moe import MoeDispatchSchedule
+
+        d = {
+            "schedule": dataclasses.asdict(self.schedule),
+            "us_per_call": self.us_per_call,
+            "measured": self.measured,
+        }
+        if isinstance(self.schedule, MoeDispatchSchedule):
+            d["kind"] = "moe"
+        elif not isinstance(self.schedule, Schedule):
+            raise TypeError(
+                f"unserializable schedule type {type(self.schedule).__name__}"
+                " (known kinds: Schedule, MoeDispatchSchedule)")
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "TuneRecord":
+        if d.get("kind") == "moe":
+            from .moe import MoeDispatchSchedule
+
+            sched = MoeDispatchSchedule(**d["schedule"])
+        else:
+            sched = Schedule(**d["schedule"])
+        return TuneRecord(schedule=sched,
+                          us_per_call=float(d["us_per_call"]),
+                          measured=dict(d.get("measured", {})))
+
+
+@contextlib.contextmanager
+def _file_lock(path: pathlib.Path):
+    """Exclusive advisory lock on ``<path>.lock`` for the duration of the
+    block (POSIX ``fcntl.flock``; silently a no-op where unavailable)."""
+    if fcntl is None:
+        yield
+        return
+    lock_path = path.with_name(path.name + ".lock")
+    with open(lock_path, "a+") as f:
+        try:
+            fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+        except OSError:  # e.g. network FS without lock support
+            yield
+            return
+        try:
+            yield
+        finally:
+            fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+
+
 class ScheduleCache:
     """On-disk (or memory-only when ``path=None``) map of cache key ->
-    :class:`TuneRecord`.  Load is lazy; ``save`` writes atomically."""
+    :class:`TuneRecord`.  Load is lazy; ``save`` merges and writes
+    atomically under a file lock.
 
-    def __init__(self, path: "os.PathLike | str | None" = ...):
+    ``namespace``/``legacy_path`` make the cache a per-backend namespace
+    file: on load, records from a pre-namespacing single-file cache whose
+    key backend component matches the namespace are folded in (under the
+    stripped key) so existing tuning work survives the layout change.
+
+    Keys no longer carry the backend, so an *explicit-path* cache is
+    single-backend by construction: sharing one file across
+    heterogeneous hosts would let one backend's records replay on
+    another.  Heterogeneous fleets use :func:`default_cache` (or one
+    explicit path per :func:`cache_namespace`) — one pre-tuned file per
+    hardware generation is the intended distribution unit.
+    """
+
+    def __init__(self, path: "os.PathLike | str | None" = ...,
+                 *, namespace: str | None = None,
+                 legacy_path: "os.PathLike | str | None" = None):
         if path is ...:
-            path = default_cache_path()
+            path = default_cache_path(namespace)
         self.path = pathlib.Path(path) if path is not None else None
+        self.namespace = namespace
+        self.legacy_path = (pathlib.Path(legacy_path)
+                            if legacy_path is not None else None)
         self._data: Dict[str, TuneRecord] = {}
         self._loaded = self.path is None
 
     # -- persistence -------------------------------------------------------
 
+    def _read_records(self, path: pathlib.Path) -> Dict[str, TuneRecord]:
+        out: Dict[str, TuneRecord] = {}
+        if not path.exists():
+            return out
+        try:
+            raw = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return out
+        if raw.get("version") != SCHEMA_VERSION:
+            return out  # stale schema: drop, re-tune lazily
+        for key, rec in raw.get("records", {}).items():
+            try:
+                out[key] = TuneRecord.from_json(rec)
+            except (KeyError, TypeError, ValueError):
+                continue  # one bad record must not poison the rest
+        return out
+
+    def _backend(self) -> str:
+        """Backend whose legacy (``|<backend>``-suffixed) records this
+        cache may adopt: the namespace's backend component, or — for an
+        explicit-path cache with no namespace — the process backend
+        (pre-namespacing files were written by the process that owned
+        them, so its backend is the right owner for their records)."""
+        if self.namespace is not None:
+            return self.namespace.split("-", 1)[0]
+        import jax
+
+        return jax.default_backend()
+
+    def _fold_legacy_keys(self, records: Dict[str, TuneRecord]) -> None:
+        """Register pre-namespacing records (backend as the last ``|``
+        key component) under their stripped key when the backend matches
+        and the stripped key is still free — so old tuning work stays
+        reachable through the new key format.  Idempotent: fresh-format
+        records always win."""
+        backend = self._backend()
+        for key, rec in records.items():
+            base, _, key_backend = key.rpartition("|")
+            if base and key_backend == backend:
+                self._data.setdefault(base, rec)
+
     def load(self) -> "ScheduleCache":
         if self._loaded:
             return self
         self._loaded = True
-        if self.path is None or not self.path.exists():
+        if self.path is None:
             return self
-        try:
-            raw = json.loads(self.path.read_text())
-        except (OSError, json.JSONDecodeError):
-            return self
-        if raw.get("version") != SCHEMA_VERSION:
-            return self  # stale schema: drop, re-tune lazily
-        for key, rec in raw.get("records", {}).items():
-            try:
-                self._data[key] = TuneRecord.from_json(rec)
-            except (KeyError, TypeError, ValueError):
-                continue  # one bad record must not poison the rest
+        own = self._read_records(self.path)
+        self._data.update(own)
+        # in-file migration (an explicit pre-namespacing cache path)...
+        self._fold_legacy_keys(own)
+        # ...and cross-file migration from the old shared single file
+        # (left untouched on disk: other namespaces still need their
+        # share of its records)
+        if self.legacy_path is not None and self.legacy_path != self.path:
+            self._fold_legacy_keys(self._read_records(self.legacy_path))
         return self
 
     def save(self) -> None:
         if self.path is None:
             return
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        # merge-on-save: another process sharing this file may have
-        # persisted records since we loaded — fold the on-disk state in
-        # (our own keys win) so concurrent tuners don't drop each
-        # other's work
-        on_disk = ScheduleCache(self.path).load()
-        merged = dict(on_disk._data)
-        merged.update(self._data)
-        self._data = merged
-        payload = {"version": SCHEMA_VERSION,
-                   "records": {k: r.to_json()
-                               for k, r in sorted(self._data.items())}}
-        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
-                                   prefix=self.path.name, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
-        except BaseException:
+        # merge-on-save under an exclusive lock: another process sharing
+        # this file may have persisted records since we loaded — fold the
+        # on-disk state in (our own keys win) so concurrent tuners don't
+        # drop each other's work, and lock so the read-merge-write itself
+        # cannot interleave with another writer's.
+        with _file_lock(self.path):
+            merged = self._read_records(self.path)
+            merged.update(self._data)
+            self._data = merged
+            payload = {"version": SCHEMA_VERSION,
+                       "records": {k: r.to_json()
+                                   for k, r in sorted(self._data.items())}}
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=self.path.name, suffix=".tmp")
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
 
     # -- mapping -----------------------------------------------------------
 
@@ -205,15 +362,18 @@ _DEFAULT_CACHES: Dict[str, ScheduleCache] = {}
 _OVERRIDE: Optional[ScheduleCache] = None
 
 
-def default_cache() -> ScheduleCache:
-    """Process-wide cache at :func:`default_cache_path` (re-resolved each
-    call so ``REPRO_TUNE_CACHE`` changes — e.g. in tests — take effect)."""
+def default_cache(backend: str | None = None) -> ScheduleCache:
+    """Process-wide cache for ``backend``'s namespace (default: the
+    current JAX backend).  The path is re-resolved each call so
+    ``REPRO_TUNE_CACHE`` changes — e.g. in tests — take effect."""
     if _OVERRIDE is not None:
         return _OVERRIDE
-    path = str(default_cache_path())
+    ns = cache_namespace(backend)
+    path = str(default_cache_path(ns))
     cache = _DEFAULT_CACHES.get(path)
     if cache is None:
-        cache = _DEFAULT_CACHES[path] = ScheduleCache(path)
+        cache = _DEFAULT_CACHES[path] = ScheduleCache(
+            path, namespace=ns, legacy_path=legacy_cache_path())
     return cache
 
 

@@ -112,24 +112,28 @@ def _feasible(cands: List[Schedule], stats: dict) -> List[Schedule]:
 
 
 class _Memo:
-    """Measure-at-most-once memo over schedule points (shared by both
-    tuners): ``memo(s)`` returns us/call, measuring on first sight."""
+    """Measure-at-most-once memo over schedule points (shared by all
+    tuners): ``memo(s)`` returns us/call, measuring on first sight.
+    ``key_fn`` stringifies a point (``schedule_key`` for SpMM /
+    segment-reduce, ``moe_schedule_key`` for MoE dispatch)."""
 
-    def __init__(self, measure: Callable[[Schedule], float]):
+    def __init__(self, measure: Callable[[object], float],
+                 key_fn: Callable[[object], str] = schedule_key):
         self._measure = measure
+        self._key_fn = key_fn
         self.timings: Dict[str, float] = {}
 
-    def __call__(self, s: Schedule) -> float:
-        k = schedule_key(s)
+    def __call__(self, s) -> float:
+        k = self._key_fn(s)
         if k not in self.timings:
             self.timings[k] = float(self._measure(s)) * 1e6
         return self.timings[k]
 
-    def seen(self, s: Schedule) -> bool:
-        return schedule_key(s) in self.timings
+    def seen(self, s) -> bool:
+        return self._key_fn(s) in self.timings
 
 
-def _persist(cache: ScheduleCache, key: str, best: Schedule,
+def _persist(cache: ScheduleCache, key: str, best,
              memo: _Memo) -> TuneResult:
     """Record the winner and write the cache through (shared epilogue)."""
     result = TuneResult(schedule=best, us_per_call=memo(best),
@@ -180,8 +184,8 @@ def tune_schedule(
                 schedule analogue via ``tune.measure``.
     """
     if cache is None:
-        cache = default_cache()
-    key = cache_key(csr, n_dense_cols, backend)
+        cache = default_cache(backend)
+    key = cache_key(csr, n_dense_cols)
     hit = _replay(cache, key)
     if hit is not None:
         return hit
@@ -235,9 +239,9 @@ def cached_or_auto(csr, n_dense_cols: int, *,
     ``ServeEngine.prepare_sparse`` or ``launch.hillclimb --spmm``) and
     must not stall a request on a tuning run."""
     if cache is None:
-        cache = default_cache()
+        cache = default_cache(backend)
     rec = cache.get(key if key is not None
-                    else cache_key(csr, n_dense_cols, backend))
+                    else cache_key(csr, n_dense_cols))
     if rec is not None:
         return rec.schedule
     return Schedule.auto(matrix_stats(csr), n_dense_cols)
@@ -272,15 +276,11 @@ def tune_segment_reduce(
     seg = np.asarray(seg_ids)
     t = int(seg.shape[0])
     lengths = np.bincount(seg, minlength=max(num_segments, 1))
-    if backend is None:
-        import jax
-
-        backend = jax.default_backend()
     fp = fingerprint_from_lengths(lengths, (num_segments, n_cols), t)
-    key = f"segred:{fp}|N{n_cols}|{backend}"
+    key = f"segred:{fp}|N{n_cols}"
 
     if cache is None:
-        cache = default_cache()
+        cache = default_cache(backend)
     hit = _replay(cache, key)
     if hit is not None:
         return hit

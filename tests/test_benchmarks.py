@@ -1,0 +1,165 @@
+"""Tests for the benchmark harness plumbing (ISSUE 3 satellites):
+the ERROR-row exit-code path of ``benchmarks.run`` (previously
+untested), ``--only`` filtering, and the ``benchmarks/diff.py``
+bench-artifact regression gate CI runs between consecutive uploads.
+"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import diff as bench_diff  # noqa: E402
+from benchmarks import run as bench_run  # noqa: E402
+
+
+def _run_main(monkeypatch, argv):
+    monkeypatch.setattr(sys, "argv", ["benchmarks.run"] + argv)
+    bench_run.main()
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run
+# ---------------------------------------------------------------------------
+
+
+def test_error_row_exits_nonzero_and_reports(monkeypatch, capsys, tmp_path):
+    from benchmarks import tables
+
+    def boom(quick):
+        raise RuntimeError("synthetic bench failure")
+
+    monkeypatch.setattr(tables, "table1_group_size", boom)
+    out_json = tmp_path / "bench.json"
+    with pytest.raises(SystemExit) as exc:
+        _run_main(monkeypatch, ["--only", "table1",
+                                "--json", str(out_json)])
+    assert exc.value.code == 1
+    captured = capsys.readouterr()
+    # ERROR row lands in the CSV (in-band) and on stderr with traceback
+    assert "table1,NaN,ERROR:" in captured.out
+    assert "synthetic bench failure" in captured.err
+    assert "Traceback" in captured.err
+    # and in the JSON artifact with a null us_per_call
+    rows = json.loads(out_json.read_text())
+    assert rows["table1"]["us_per_call"] is None
+    assert rows["table1"]["derived"].startswith("ERROR:")
+
+
+def test_only_filter_runs_exactly_the_named_benches(monkeypatch, capsys):
+    from benchmarks import beyond, tables
+
+    called = []
+
+    def fake(name):
+        def bench(quick):
+            called.append(name)
+            return [(f"{name}/row", 1.0, "ok")]
+
+        return bench
+
+    monkeypatch.setattr(tables, "table1_group_size", fake("table1"))
+    monkeypatch.setattr(tables, "table5_dynamic_choice", fake("table5"))
+    monkeypatch.setattr(beyond, "moe_dispatch", fake("moe"))
+    monkeypatch.setattr(beyond, "moe_tuner_gap", fake("moe_tuner"))
+    monkeypatch.setattr(beyond, "selector_quality", fake("selector"))
+    _run_main(monkeypatch, ["--only", "moe,moe_tuner"])
+    assert called == ["moe", "moe_tuner"]
+    out = capsys.readouterr().out
+    assert "moe/row,1.0,ok" in out
+    assert "table1" not in out
+
+
+def test_only_filter_rejects_unknown_names(monkeypatch, capsys):
+    with pytest.raises(SystemExit) as exc:
+        _run_main(monkeypatch, ["--only", "not_a_bench"])
+    assert exc.value.code == 2  # argparse usage error
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.diff
+# ---------------------------------------------------------------------------
+
+
+def _bench(rows):
+    return {name: {"us_per_call": us, "derived": derived}
+            for name, us, derived in rows}
+
+
+def _write(tmp_path, name, bench):
+    p = tmp_path / name
+    p.write_text(json.dumps(bench))
+    return str(p)
+
+
+def test_diff_green_within_threshold(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", _bench([
+        ("table5/a", 100.0, ""), ("table5/b", 200.0, ""),
+        ("beyond/tuner_gap", 0.0, "tuned_vs_auto_geomean=1.200"),
+    ]))
+    new = _write(tmp_path, "new.json", _bench([
+        ("table5/a", 105.0, ""), ("table5/b", 207.0, ""),
+        ("beyond/tuner_gap", 0.0, "tuned_vs_auto_geomean=1.150"),
+    ]))
+    assert bench_diff.main([old, new, "--threshold", "0.10"]) == 0
+    assert "ok" in capsys.readouterr().out
+
+
+def test_diff_fails_on_synthetic_regression(tmp_path, capsys):
+    """>10% geomean us regression exits non-zero (acceptance crit.)."""
+    old = _write(tmp_path, "old.json", _bench([
+        ("table5/a", 100.0, ""), ("table5/b", 200.0, "")]))
+    new = _write(tmp_path, "new.json", _bench([
+        ("table5/a", 115.0, ""), ("table5/b", 230.0, "")]))
+    assert bench_diff.main([old, new, "--threshold", "0.10"]) == 1
+    assert "REGRESSED" in capsys.readouterr().out
+
+
+def test_diff_fails_on_derived_geomean_drop(tmp_path):
+    """The tuner-gap win ratio dropping >threshold also gates."""
+    old = _write(tmp_path, "old.json", _bench([
+        ("beyond/moe_tuner_gap", 0.0, "tuned_vs_default_geomean=1.500")]))
+    new = _write(tmp_path, "new.json", _bench([
+        ("beyond/moe_tuner_gap", 0.0, "tuned_vs_default_geomean=1.200")]))
+    assert bench_diff.main([old, new]) == 1
+
+
+def test_diff_oracle_slowdown_ratios_are_informational(tmp_path, capsys):
+    """`*_vs_oracle_geomean` is a slowdown ratio (lower = better): an
+    *improvement* must not trip the lower-is-worse win-ratio gate, and
+    a worsening is reported but does not gate either (direction-aware
+    gating only covers the allowlisted win ratios)."""
+    old = _write(tmp_path, "old.json", _bench([
+        ("beyond/tuner_gap", 0.0,
+         "tuned_vs_auto_geomean=1.200,auto_vs_oracle_geomean=1.400")]))
+    improved = _write(tmp_path, "improved.json", _bench([
+        ("beyond/tuner_gap", 0.0,
+         "tuned_vs_auto_geomean=1.200,auto_vs_oracle_geomean=1.050")]))
+    assert bench_diff.main([old, improved]) == 0
+    assert "info" in capsys.readouterr().out
+    worse = _write(tmp_path, "worse.json", _bench([
+        ("beyond/tuner_gap", 0.0,
+         "tuned_vs_auto_geomean=1.200,auto_vs_oracle_geomean=1.900")]))
+    assert bench_diff.main([old, worse]) == 0
+
+
+def test_diff_skips_disjoint_and_error_rows(tmp_path, capsys):
+    """First run of a fresh bench set (no shared rows) stays green, and
+    ERROR rows (null us) never poison a geomean."""
+    old = _write(tmp_path, "old.json", _bench([
+        ("table5/gone", 100.0, "")]))
+    new = _write(tmp_path, "new.json", _bench([
+        ("table5/fresh", 500.0, ""),
+        ("beyond/tuner/x", None, "ERROR:boom")]))
+    assert bench_diff.main([old, new]) == 0
+    assert "SKIP" in capsys.readouterr().out
+
+
+def test_diff_compare_is_importable_for_local_use(tmp_path):
+    old = _bench([("table5/a", 100.0, "")])
+    new = _bench([("table5/a", 200.0, "")])
+    findings = bench_diff.compare(old, new, threshold=0.10)
+    kinds = {(k, reg) for k, _, _, _, _, reg in findings}
+    assert ("us", True) in kinds

@@ -1,0 +1,372 @@
+"""Tests for MoE grouped-matmul dispatch tuning (ISSUE 3).
+
+Covers the acceptance surface: the tuned ``(token_tile,
+capacity_factor, f_tile, d_tile)`` is never slower than the static
+default under the session's own measurements; a second call with the
+same expert histogram replays the per-backend namespace cache with
+*zero* measurements; capacity-factor candidates never drop more routed
+tokens than the default; the fingerprint is order-invariant but
+histogram-shape-sensitive (property test); legacy single-file caches
+migrate transparently; and the dispatch plugs into ``apply_moe``
+without changing the math when the capacity factor is unchanged.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models.moe import (
+    apply_moe,
+    balanced_expert_lengths,
+    expert_lengths_from_gates,
+    init_moe,
+    moe_dispatch_schedule,
+    moe_tune_dispatch,
+)
+from repro.tune import (
+    SCHEMA_VERSION,
+    MoeDispatchSchedule,
+    ScheduleCache,
+    TuneRecord,
+    cache_namespace,
+    default_cache_path,
+    fingerprint_from_lengths,
+    moe_cache_key,
+    moe_cached_or_default,
+    moe_capacity,
+    moe_schedule_key,
+    tune_moe_dispatch,
+)
+from repro.tune.moe import candidate_moe_schedules, dropped_tokens
+
+RTOL = ATOL = 2e-4
+
+SKEWED = np.array([300, 200, 100, 50, 25, 12, 6, 3])
+BALANCED = np.full(8, 128)
+
+
+def _cfg(**kw):
+    over = dict(d_model=64, moe_d_ff=64, n_experts=4, experts_per_token=2)
+    over.update(kw)
+    return smoke_config(ARCHS["qwen3-moe-235b-a22b"]).scaled(**over)
+
+
+def _fake_measure(costs=None):
+    """Deterministic, instant objective keyed on the schedule string."""
+    calls = []
+
+    def measure(s: MoeDispatchSchedule) -> float:
+        calls.append(s)
+        if costs is not None:
+            return costs(s)
+        h = sum(ord(c) for c in moe_schedule_key(s))
+        return 1e-3 * (1.0 + (h % 89) / 89.0)
+
+    return measure, calls
+
+
+# ---------------------------------------------------------------------------
+# Search behavior
+# ---------------------------------------------------------------------------
+
+
+def test_tuned_never_loses_to_default_in_session():
+    for lengths in (SKEWED, BALANCED):
+        measure, _ = _fake_measure()
+        default = MoeDispatchSchedule(capacity_factor=1.25)
+        res = tune_moe_dispatch(lengths, 128, 256, default=default,
+                                cache=ScheduleCache(None), measure=measure)
+        assert isinstance(res.schedule, MoeDispatchSchedule)
+        default_key = moe_schedule_key(default)
+        assert default_key in res.measured  # default always in the pool
+        assert res.us_per_call <= res.measured[default_key] + 1e-12
+
+
+def test_cache_hit_replays_with_zero_measurements(tmp_path):
+    path = tmp_path / "cache.json"
+    measure, calls = _fake_measure()
+    res = tune_moe_dispatch(SKEWED, 128, 256, cache=ScheduleCache(path),
+                            measure=measure)
+    assert not res.from_cache and len(calls) > 0
+
+    measure2, calls2 = _fake_measure()
+    res2 = tune_moe_dispatch(SKEWED, 128, 256, cache=ScheduleCache(path),
+                             measure=measure2)
+    assert res2.from_cache
+    assert calls2 == []
+    assert res2.n_measurements == 0
+    assert res2.schedule == res.schedule
+    # record round-trips through JSON as a MoeDispatchSchedule
+    raw = json.loads(path.read_text())
+    rec = next(iter(raw["records"].values()))
+    assert rec["kind"] == "moe"
+
+
+def test_capacity_candidates_never_drop_more_than_default():
+    default = MoeDispatchSchedule(capacity_factor=1.25)
+    budget = dropped_tokens(SKEWED, moe_capacity(SKEWED, 1.25))
+    for s in candidate_moe_schedules(SKEWED, default=default):
+        assert dropped_tokens(
+            SKEWED, moe_capacity(SKEWED, s.capacity_factor)) <= budget
+
+
+def test_assumed_histogram_never_shrinks_capacity(tmp_path):
+    """Tuning from the *assumed* balanced histogram (no observed
+    routing) must not offer sub-default capacity factors: safe on the
+    assumption, token-dropping on a skewed live batch."""
+    default = MoeDispatchSchedule(capacity_factor=1.25)
+    for s in candidate_moe_schedules(BALANCED, default=default,
+                                     allow_capacity_shrink=False):
+        assert s.capacity_factor >= default.capacity_factor
+    # the model-level entry point applies the constraint automatically
+    cfg = _cfg()
+    measure, _ = _fake_measure()
+    res = moe_tune_dispatch(cfg, 256, cache=ScheduleCache(None),
+                            measure=measure)
+    assert res.schedule.capacity_factor >= cfg.capacity_factor
+    # ...but an observed histogram may still shrink when it drops nothing
+    factors = {s.capacity_factor
+               for s in candidate_moe_schedules(BALANCED, default=default)}
+    assert min(factors) < default.capacity_factor
+
+
+def test_shrink_flag_keys_separate_records(tmp_path):
+    """Observed-histogram (shrink allowed) and assumed-histogram
+    (no-shrink) tuning key separate cache records — neither regime ever
+    replays the other's winner."""
+    cache = ScheduleCache(tmp_path / "c.json")
+    measure, _ = _fake_measure()
+    res_obs = tune_moe_dispatch(BALANCED, 128, 256, cache=cache,
+                                measure=measure)
+    measure2, calls2 = _fake_measure()
+    res_ass = tune_moe_dispatch(BALANCED, 128, 256, cache=cache,
+                                measure=measure2,
+                                allow_capacity_shrink=False)
+    assert calls2  # the observed-regime record was NOT replayed
+    assert res_ass.key != res_obs.key
+    assert res_ass.schedule.capacity_factor >= 1.25
+    # the resolver selects by the same flag
+    assert moe_cached_or_default(
+        BALANCED, 128, 256, cache=cache,
+        allow_capacity_shrink=False) == res_ass.schedule
+    assert moe_cached_or_default(BALANCED, 128, 256,
+                                 cache=cache) == res_obs.schedule
+
+
+def test_capacity_clamps_at_deployed_token_count():
+    """moe_capacity with max_tokens mirrors models.moe._capacity's upper
+    clamp (t_local), which matters when epk × factor > n_experts."""
+    lengths = np.full(2, 256)  # n_experts=2, epk=2, t_local=256
+    assert moe_capacity(lengths, 1.25, max_tokens=256) == 256
+    assert moe_capacity(lengths, 1.25) == 320  # loose bound without it
+
+
+def test_moe_cached_or_default_never_measures(tmp_path):
+    cache = ScheduleCache(tmp_path / "c.json")
+    default = MoeDispatchSchedule(capacity_factor=1.5)
+    # miss -> the static default, no measurement possible by construction
+    assert moe_cached_or_default(SKEWED, 128, 256, default=default,
+                                 cache=cache) == default
+    measure, calls = _fake_measure()
+    tuned = tune_moe_dispatch(SKEWED, 128, 256, cache=cache,
+                              measure=measure).schedule
+    assert calls
+    assert moe_cached_or_default(SKEWED, 128, 256, cache=cache) == tuned
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        MoeDispatchSchedule(token_tile=4)
+    with pytest.raises(ValueError):
+        MoeDispatchSchedule(capacity_factor=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint properties
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_order_invariant_shape_sensitive_basics():
+    a = np.array([100, 10, 1, 50])
+    fp = moe_cache_key(a, 128, 256)
+    assert moe_cache_key(np.array([1, 50, 100, 10]), 128, 256) == fp
+    # a different histogram shape, dim, or dtype produces a fresh key
+    assert moe_cache_key(np.array([40, 40, 41, 40]), 128, 256) != fp
+    assert moe_cache_key(a, 64, 256) != fp
+    assert moe_cache_key(a, 128, 512) != fp
+    assert moe_cache_key(a, 128, 256, "bfloat16") != fp
+    # different deployed token budgets (capacity clamps) key separately
+    assert (moe_cache_key(a, 128, 256, max_tokens=512)
+            != moe_cache_key(a, 128, 256, max_tokens=256))
+    assert moe_cache_key(a, 128, 256, max_tokens=512) != fp
+
+
+def test_fingerprint_from_lengths_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(min_value=1, max_value=10_000),
+                    min_size=2, max_size=64),
+           st.randoms(use_true_random=False))
+    def prop(lengths, rng):
+        lengths = np.asarray(lengths)
+        shuffled = lengths.copy()
+        rng.shuffle(shuffled)
+        shape = (len(lengths), 128)
+        nnz = int(lengths.sum())
+        # order-invariant: any permutation fingerprints identically
+        assert (fingerprint_from_lengths(shuffled, shape, nnz)
+                == fingerprint_from_lengths(lengths, shape, nnz))
+        # shape-sensitive: doubling every segment moves the quantiles
+        assert (fingerprint_from_lengths(lengths * 2, shape, nnz * 2)
+                != fingerprint_from_lengths(lengths, shape, nnz))
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Namespacing + migration
+# ---------------------------------------------------------------------------
+
+
+def test_per_backend_namespace_files(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    ns = cache_namespace()
+    assert default_cache_path() == tmp_path / f"tune.{ns}.json"
+    assert default_cache_path("tpu-v5e") == tmp_path / "tune.tpu-v5e.json"
+    # default-cache tuning lands in the namespace file, and a second
+    # call replays it measurement-free (the acceptance criterion)
+    measure, calls = _fake_measure()
+    res = tune_moe_dispatch(SKEWED, 128, 256, measure=measure)
+    assert calls and not res.from_cache
+    assert (tmp_path / f"tune.{ns}.json").exists()
+    assert not (tmp_path / "tune.json").exists()  # legacy file untouched
+    measure2, calls2 = _fake_measure()
+    res2 = tune_moe_dispatch(SKEWED, 128, 256, measure=measure2)
+    assert res2.from_cache and calls2 == []
+
+
+def test_explicit_path_cache_folds_its_own_legacy_keys(tmp_path):
+    """A PR-2-era cache file passed *explicitly* (no namespace) must
+    keep its old ``|<backend>``-suffixed records reachable through the
+    new stripped keys — the in-file migration path."""
+    import jax
+
+    from repro.core import Schedule
+
+    backend = jax.default_backend()
+    old = TuneRecord(schedule=Schedule("eb", nnz_tile=512, group_size=8),
+                     us_per_call=7.0)
+    path = tmp_path / "explicit.json"
+    path.write_text(json.dumps({
+        "version": SCHEMA_VERSION,
+        "records": {f"mAxB_nnz9_cv0.000_q1|N4|{backend}": old.to_json(),
+                    "mAxB_nnz9_cv0.000_q1|N4|other": old.to_json()},
+    }))
+    cache = ScheduleCache(path)
+    rec = cache.get("mAxB_nnz9_cv0.000_q1|N4")
+    assert rec is not None and rec.schedule == old.schedule
+    # the foreign-backend record is not adopted under a stripped key
+    assert cache.get("mAxB_nnz9_cv0.000_q1|N4|other") is not None
+
+
+def test_legacy_single_file_cache_migrates(tmp_path, monkeypatch):
+    """Records tuned before namespacing (backend as the last key
+    component of one shared file) are found through the namespace cache
+    without re-tuning; foreign-backend records are not imported."""
+    from repro.core import Schedule
+    from repro.tune import default_cache
+
+    legacy = tmp_path / "tune.json"
+    backend = cache_namespace().split("-", 1)[0]
+    mine = TuneRecord(schedule=Schedule("eb", nnz_tile=512, group_size=8),
+                      us_per_call=12.0)
+    theirs = TuneRecord(schedule=Schedule("rb"), us_per_call=3.0)
+    legacy.write_text(json.dumps({
+        "version": SCHEMA_VERSION,
+        "records": {f"mAxB_nnz9_cv0.000_q1|N4|{backend}": mine.to_json(),
+                    "mAxB_nnz9_cv0.000_q1|N4|other": theirs.to_json()},
+    }))
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(legacy))
+    cache = default_cache()
+    rec = cache.get("mAxB_nnz9_cv0.000_q1|N4")
+    assert rec is not None
+    assert rec.schedule == mine.schedule
+    assert len(cache) == 1  # the foreign-backend record stayed out
+
+
+# ---------------------------------------------------------------------------
+# End-to-end through the model and the engine
+# ---------------------------------------------------------------------------
+
+
+def test_moe_tune_dispatch_end_to_end(tmp_path):
+    cfg = _cfg()
+    cache = ScheduleCache(tmp_path / "c.json")
+    measure, calls = _fake_measure()
+    res = moe_tune_dispatch(cfg, 256, cache=cache, measure=measure)
+    assert calls
+    assert res.schedule.capacity_factor > 0
+    # the resolver replays the same schedule with zero measurements
+    assert moe_dispatch_schedule(cfg, 256, cache=cache) == res.schedule
+    # an *observed* (different) histogram tunes its own record
+    gates = np.zeros((256, cfg.n_experts))
+    gates[:, 0] = 1.0  # everything routed to expert 0: maximal skew
+    lengths = np.asarray(expert_lengths_from_gates(gates))
+    assert (moe_cache_key(lengths, cfg.d_model, cfg.moe_d_ff)
+            != moe_cache_key(np.asarray(balanced_expert_lengths(cfg, 256)),
+                             cfg.d_model, cfg.moe_d_ff))
+
+
+@pytest.mark.parametrize("moe_d_ff,f_tile,d_tile", [
+    (64, 32, 32),   # square d==f, symmetric tiles
+    (64, 32, 16),   # square d==f, asymmetric tiles (role swap would show)
+    (128, 64, 16),  # rectangular
+])
+def test_apply_moe_dispatch_matches_default_math(moe_d_ff, f_tile, d_tile):
+    """A tuned dispatch with the default capacity factor changes tiles
+    only — the Pallas path's output must be identical math, including
+    when d_model == moe_d_ff and f_tile != d_tile (tile roles must be
+    assigned per GEMM, not sniffed from shapes)."""
+    cfg = _cfg(moe_d_ff=moe_d_ff).scaled(moe_pallas_dispatch=True)
+    p = init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    out_ref, aux_ref = apply_moe(cfg, p, x, None)
+    disp = MoeDispatchSchedule(token_tile=32,
+                               capacity_factor=cfg.capacity_factor,
+                               f_tile=f_tile, d_tile=d_tile)
+    out_t, aux_t = apply_moe(cfg, p, x, None, dispatch=disp)
+    np.testing.assert_allclose(np.asarray(out_t), np.asarray(out_ref),
+                               rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(float(aux_t), float(aux_ref), rtol=RTOL)
+
+
+def test_serve_engine_prepare_moe_and_resolver(tmp_path, monkeypatch):
+    from repro.serve.engine import ServeEngine
+
+    monkeypatch.setenv("REPRO_BENCH_ITERS", "1")
+    monkeypatch.setenv("REPRO_BENCH_WARMUP", "0")
+
+    class _API:  # the MoE tuning path never touches decode
+        def init_cache(self, slots, max_len):
+            return {}
+
+        def decode_step(self, params, cache, toks):  # pragma: no cover
+            raise NotImplementedError
+
+    cfg = _cfg()
+    cache = ScheduleCache(tmp_path / "c.json")
+    eng = ServeEngine(_API(), params={}, slots=1, tuner_cache=cache)
+    # monkey-free ahead-of-time tuning via the injectable measure is not
+    # exposed on the engine; use the real (quick) objective instead
+    sched = eng.prepare_moe(cfg, 64)
+    assert isinstance(sched, MoeDispatchSchedule)
+    # request path: memo hit, no measurement machinery involved
+    assert eng.moe_dispatch_schedule(cfg, 64) == sched
+    # a second engine sharing the cache file resolves measurement-free
+    eng2 = ServeEngine(_API(), params={}, slots=1,
+                       tuner_cache=ScheduleCache(tmp_path / "c.json"))
+    assert eng2.moe_dispatch_schedule(cfg, 64) == sched
