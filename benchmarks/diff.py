@@ -1,29 +1,44 @@
-"""Bench-artifact regression diff (ISSUE 3 satellite).
+"""Bench-artifact regression diff (ISSUE 3 satellite; ISSUE 4: probe
+normalization + N-run trajectory window).
 
-Compares two ``BENCH_<tag>.json`` artifacts (as written by
+Compares ``BENCH_<tag>.json`` artifacts (as written by
 ``benchmarks.run --json``) and exits non-zero when the new run regresses
-past a threshold.  Two signals are checked:
+past a threshold.  Signals checked:
 
 * **us_per_call geomeans** per row group (default group: ``table5``):
-  geomean over the names both artifacts share; regression when
-  ``new/old > 1 + threshold``;
+  geomean over the names both artifacts share.  When both artifacts
+  carry the ``probe/runner_speed`` row (a fixed dense-matmul timing
+  baked into every artifact), the geomeans are **normalized by the
+  probe** — ``(new/new_probe) / (old/old_probe)`` — so heterogeneous CI
+  runner CPUs stop gating on raw machine speed; without a probe on both
+  sides the raw ratio gates as before.  Regression when the (normalized)
+  ratio exceeds ``1 + threshold``;
 * **derived geomean metrics** — ``derived`` fields carry
-  ``<key>_geomean=<x>`` ratios.  Only the *win* ratios
-  (``tuned_vs_auto_geomean``, ``tuned_vs_default_geomean`` — higher is
-  better) gate, failing when ``new < old * (1 - threshold)``; other
-  geomean keys (e.g. the ``*_vs_oracle`` slowdown ratios, where lower
-  is better) are reported informationally but never fail.  The tuner
-  gaps gate through win ratios rather than absolute wall clock: a ratio
-  is measured within one run on one machine, so it survives the
-  runner-to-runner CPU variance that makes absolute us comparisons
-  across CI runs noisy.
+  ``<key>_geomean=<x>`` ratios.  Only the *win* ratios in
+  ``GATED_GEOMEAN_KEYS`` (``tuned_vs_auto_geomean``,
+  ``tuned_vs_default_geomean`` — higher is better) gate, failing when
+  ``new < old * (1 - threshold)``; other geomean keys are reported
+  informationally but never fail — both the ``*_vs_oracle`` slowdown
+  ratios (lower is better) and ``fused_vs_unfused_geomean`` (a win
+  ratio whose magnitude swings with runner load; see the comment at
+  ``GATED_GEOMEAN_KEYS``).  Gated win ratios are measured within one
+  run on one machine, so they need no probe;
+* **trajectory drift** — with ``--trajectory traj.json``, the previous
+  run is the trajectory's last entry *and* the new run is additionally
+  gated against the **median of the last N runs' normalized geomeans**
+  (``--window``, default 5): a slow drift of +4% per run passes every
+  pairwise diff but accumulates past the threshold against the window
+  median.  ``--update`` appends the new run and trims to the window, so
+  CI keeps one rolling artifact.
 
 Runs standalone (stdlib only) so CI and local use are the same command:
 
     python benchmarks/diff.py old.json new.json --threshold 0.10
+    python benchmarks/diff.py --trajectory traj.json new.json --update
 
-Missing groups or no shared rows are reported and *skipped*, never
-failed — the first run of a fresh benchmark set must stay green.
+Missing groups, absent probes, or no shared rows are reported and
+*skipped*, never failed — the first run of a fresh benchmark set must
+stay green.
 """
 from __future__ import annotations
 
@@ -34,10 +49,16 @@ import re
 import sys
 
 DEFAULT_GROUPS = ("table5",)
+DEFAULT_WINDOW = 5
+PROBE_ROW = "probe/runner_speed"
+TRAJECTORY_VERSION = 1
 
 # derived geomean keys where higher is better (gateable win ratios);
-# anything else matched by the regex — e.g. auto_vs_oracle_geomean, a
-# slowdown ratio where LOWER is better — is reported but never gates
+# anything else matched by the regex is reported but never gates — e.g.
+# auto_vs_oracle_geomean (a slowdown ratio where LOWER is better) and
+# fused_vs_unfused_geomean (a win ratio, but its two sides are multi-
+# second kernel timings measured sequentially, so its *magnitude* swings
+# ±40% under runner contention even though the >1 win itself is robust)
 GATED_GEOMEAN_KEYS = ("tuned_vs_auto_geomean", "tuned_vs_default_geomean")
 
 _GEOMEAN_RE = re.compile(r"([a-z0-9_/]*geomean)=([-+0-9.eE]+)")
@@ -52,6 +73,28 @@ def load_bench(path: str) -> dict:
     return data
 
 
+def load_trajectory(path: str) -> list:
+    """List of artifacts, oldest first.  Tolerates a missing file (fresh
+    trajectory) and a bare artifact (pre-trajectory BENCH_ci.json used to
+    seed the window)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return []
+    if isinstance(data, dict) and "runs" in data:
+        return list(data["runs"])
+    if isinstance(data, dict):
+        return [data]  # a bare artifact seeds a 1-run window
+    raise ValueError(f"{path}: expected a trajectory or an artifact")
+
+
+def save_trajectory(path: str, runs: list, window: int) -> None:
+    with open(path, "w") as f:
+        json.dump({"version": TRAJECTORY_VERSION,
+                   "runs": runs[-window:]}, f, indent=1)
+
+
 def _geomean(xs) -> float:
     return math.exp(sum(math.log(x) for x in xs) / len(xs))
 
@@ -63,6 +106,11 @@ def _us_rows(bench: dict, group: str) -> dict:
         if name.startswith(group) and isinstance(us, (int, float)) and us > 0:
             out[name] = float(us)
     return out
+
+
+def probe_us(bench: dict) -> float | None:
+    us = (bench.get(PROBE_ROW) or {}).get("us_per_call")
+    return float(us) if isinstance(us, (int, float)) and us > 0 else None
 
 
 def _derived_geomeans(bench: dict) -> dict:
@@ -79,16 +127,28 @@ def _derived_geomeans(bench: dict) -> dict:
     return out
 
 
+def _group_geomean(bench: dict, group: str, names) -> float | None:
+    rows = _us_rows(bench, group)
+    vals = [rows[n] for n in names if n in rows]
+    return _geomean(vals) if len(vals) == len(list(names)) and vals else None
+
+
 def compare(old: dict, new: dict, *, threshold: float = 0.10,
-            groups=DEFAULT_GROUPS) -> list:
+            groups=DEFAULT_GROUPS, window: list | None = None) -> list:
     """Findings as ``(kind, label, old, new, ratio, regressed)`` tuples.
 
-    kind 'us' ratios are new/old time (higher is worse); kind 'geomean'
-    ratios are new/old win ratio (lower is worse); kind 'info' is a
-    non-gating derived ratio (direction unknown, e.g. vs-oracle
-    slowdowns); kind 'skip' marks a group with no shared rows.
+    kind 'us' ratios are probe-normalized new/old time (higher is worse);
+    kind 'drift' is new vs the window-median baseline (trajectory mode);
+    kind 'geomean' ratios are new/old win ratio (lower is worse); kind
+    'info' is a non-gating derived ratio; kind 'skip' marks a group with
+    no shared rows.
     """
     findings = []
+    p_old, p_new = probe_us(old), probe_us(new)
+    normalize = p_old is not None and p_new is not None
+    if normalize:
+        findings.append(("info", f"{PROBE_ROW} (runner speed)",
+                         p_old, p_new, p_new / p_old, False))
     for group in groups:
         a, b = _us_rows(old, group), _us_rows(new, group)
         shared = sorted(set(a) & set(b))
@@ -98,8 +158,36 @@ def compare(old: dict, new: dict, *, threshold: float = 0.10,
         g_old = _geomean([a[n] for n in shared])
         g_new = _geomean([b[n] for n in shared])
         ratio = g_new / g_old
-        findings.append(("us", f"{group} ({len(shared)} rows)",
-                         g_old, g_new, ratio, ratio > 1.0 + threshold))
+        if normalize:
+            ratio /= p_new / p_old
+        label = (f"{group} ({len(shared)} rows"
+                 + (", probe-normalized)" if normalize else ")"))
+        findings.append(("us", label, g_old, g_new, ratio,
+                         ratio > 1.0 + threshold))
+        # trajectory drift: new vs the median of the window's normalized
+        # geomeans over the same shared rows
+        if window:
+            baselines = []
+            for run in window:
+                g = _group_geomean(run, group, shared)
+                p = probe_us(run)
+                if g is None:
+                    continue
+                if normalize:
+                    if p is None:
+                        # a pre-probe run's raw us is not comparable to
+                        # normalized values — skip it, don't poison the
+                        # median (the CI seed path hits this)
+                        continue
+                    g /= p
+                baselines.append(g)
+            if baselines:
+                base = sorted(baselines)[len(baselines) // 2]
+                g_norm = g_new / p_new if normalize else g_new
+                dr = g_norm / base
+                findings.append(
+                    ("drift", f"{group} vs {len(baselines)}-run median",
+                     base, g_norm, dr, dr > 1.0 + threshold))
     d_old, d_new = _derived_geomeans(old), _derived_geomeans(new)
     for key in sorted(set(d_old) & set(d_new)):
         ratio = d_new[key] / d_old[key]
@@ -112,34 +200,73 @@ def compare(old: dict, new: dict, *, threshold: float = 0.10,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("old", help="previous BENCH json artifact")
+    ap.add_argument("old", nargs="?", default=None,
+                    help="previous BENCH json artifact (omit with "
+                         "--trajectory: its last run is the baseline)")
     ap.add_argument("new", help="current BENCH json artifact")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="fractional geomean regression that fails "
                          "(default 0.10 = 10%%)")
     ap.add_argument("--groups", default=",".join(DEFAULT_GROUPS),
                     help="comma list of row-name prefixes to diff")
+    ap.add_argument("--trajectory", default=None, metavar="PATH",
+                    help="rolling N-run trajectory file: the last run is "
+                         "the pairwise baseline and the window median "
+                         "gates slow drift")
+    ap.add_argument("--window", type=int, default=DEFAULT_WINDOW,
+                    help=f"trajectory window size (default "
+                         f"{DEFAULT_WINDOW})")
+    ap.add_argument("--update", action="store_true",
+                    help="append the new run to --trajectory (trimmed to "
+                         "the window) after diffing")
     args = ap.parse_args(argv)
 
-    old = load_bench(args.old)
     new = load_bench(args.new)
+    window: list = []
+    if args.trajectory is not None:
+        window = load_trajectory(args.trajectory)[-args.window:]
+    if args.old is not None:
+        old = load_bench(args.old)
+    elif window:
+        old = window[-1]
+    elif args.trajectory is not None:
+        # fresh trajectory: nothing to diff against, pass (and seed the
+        # window when asked to persist)
+        if args.update:
+            save_trajectory(args.trajectory, [new], args.window)
+            print(f"bench diff: empty trajectory {args.trajectory}; "
+                  f"seeded with {args.new}")
+        else:
+            print(f"bench diff: empty trajectory {args.trajectory}; "
+                  f"nothing to diff (pass --update to seed it)")
+        return 0
+    else:
+        ap.error("need an old artifact or --trajectory")
+
     findings = compare(old, new, threshold=args.threshold,
-                       groups=tuple(g for g in args.groups.split(",") if g))
+                       groups=tuple(g for g in args.groups.split(",") if g),
+                       window=window)
 
     failed = False
-    print(f"bench diff: {args.old} -> {args.new} "
-          f"(threshold {args.threshold:.0%})")
+    baseline = args.old or f"{args.trajectory}[-1]"
+    print(f"bench diff: {baseline} -> {args.new} "
+          f"(threshold {args.threshold:.0%}"
+          + (f", window {len(window)}" if window else "") + ")")
     for kind, label, a, b, ratio, regressed in findings:
         if kind == "skip":
             print(f"  SKIP  {label}: no shared rows")
             continue
-        unit = "us" if kind == "us" else "x"
+        unit = "us" if kind in ("us", "drift") else "x"
         verdict = ("REGRESSED" if regressed
                    else "info" if kind == "info" else "ok")
-        arrow = "slower" if kind == "us" else "ratio"
+        arrow = "slower" if kind in ("us", "drift") else "ratio"
         print(f"  {verdict:9s} {label}: {a:.3f}{unit} -> {b:.3f}{unit} "
               f"({ratio:.3f} {arrow})")
         failed |= regressed
+    if args.trajectory is not None and args.update:
+        save_trajectory(args.trajectory,
+                        load_trajectory(args.trajectory) + [new],
+                        args.window)
     if failed:
         print("bench diff: FAIL (regression past threshold)",
               file=sys.stderr)

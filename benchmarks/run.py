@@ -3,15 +3,41 @@ beyond-paper benches. Prints ``name,us_per_call,derived`` CSV; ``--json``
 additionally emits a machine-readable ``{name: {us_per_call, derived}}``
 file (the ``BENCH_<tag>.json`` trajectory CI tracks).
 
+Every artifact also carries a ``probe/runner_speed`` row: a fixed dense
+matmul timed with a fixed iteration count.  ``benchmarks/diff.py``
+divides the absolute-us gates by this probe, so two CI runs landing on
+heterogeneous runner CPUs compare *normalized* wall clock instead of
+failing on machine speed (ISSUE 4 / ROADMAP).
+
     PYTHONPATH=src python -m benchmarks.run [--full] [--json BENCH_ci.json]
 
 ``REPRO_BENCH_ITERS`` caps per-measurement timing iterations (CI smoke
-sets it low to stay inside its time budget).
+sets it low to stay inside its time budget); the probe ignores it — its
+whole point is a stable cross-run yardstick.
 """
 import argparse
 import json
 import sys
 import traceback
+
+PROBE_ROW = "probe/runner_speed"
+
+
+def runner_speed_probe():
+    """Fixed-workload runner-speed probe: a 512x512 f32 matmul, median of
+    a fixed iteration count (deliberately NOT REPRO_BENCH_ITERS-capped).
+    Returns CSV rows like every other bench."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.tune.measure import time_fn
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 512))
+    fn = jax.jit(lambda a: a @ a)
+    # cap_env=False: the probe must be comparable across runs whatever
+    # iteration caps the surrounding smoke suite set
+    t = time_fn(fn, x, warmup=2, iters=7, cap_env=False)
+    return [(PROBE_ROW, t * 1e6, "fixed 512x512 f32 matmul, iters=7")]
 
 
 def main() -> None:
@@ -20,7 +46,7 @@ def main() -> None:
                     help="larger matrices (slower, closer to paper scale)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
-                         "moe,moe_tuner,selector")
+                         "moe,moe_tuner,selector,fused_attention")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write {name: {us_per_call, derived}} JSON")
     args = ap.parse_args()
@@ -37,11 +63,16 @@ def main() -> None:
         "moe": lambda: beyond.moe_dispatch(quick),
         "moe_tuner": lambda: beyond.moe_tuner_gap(quick),
         "selector": lambda: beyond.selector_quality(quick),
+        "fused_attention": lambda: beyond.fused_attention(quick),
     }
     wanted = args.only.split(",") if args.only else list(benches)
     unknown = [w for w in wanted if w not in benches]
     if unknown:
         ap.error(f"unknown bench(es) {unknown}; have {sorted(benches)}")
+    # the probe always runs (first, before the machine heats up caches
+    # differently per bench subset) so every artifact is normalizable
+    wanted = ["probe"] + [w for w in wanted if w != "probe"]
+    benches["probe"] = runner_speed_probe
 
     print("name,us_per_call,derived")
     results = {}

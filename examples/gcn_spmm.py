@@ -1,13 +1,14 @@
 """2-layer GCN on a synthetic graph with the Sgap SpMM at its core —
 the paper's own motivating workload family (GNN aggregation).
 
-Aggregation Ã·X runs through the unified ``repro.sparse.spmm`` API with an
-auto-selected :class:`Schedule`: the forward executes the scheduled Pallas
-segment-group kernel, and the backward closes the paper's algebra family
-on itself (dvals = SDDMM(dOut, X), dX = Ãᵀ·dOut) via the built-in custom
-VJP, so the training loop differentiates through the same kernels it
-serves with.  Feed-format conversion happens once (per-(format, tile)
-cache on CSR), not per step.
+Each layer runs the *fused* path (DESIGN.md §8): ``act(Ã(XW) + b)`` is
+ONE scheduled Pallas kernel — the bias add and activation execute as an
+in-kernel epilogue on the last reduction grid step instead of separate
+HBM passes.  The backward closes the paper's algebra family on itself
+(dz = act'(z)·dOut, dvals = SDDMM(dz, X), dX = Ãᵀ·dz) via the built-in
+custom VJP, so the training loop differentiates through the same fused
+kernel it serves with.  Feed-format conversion happens once
+(per-(format, tile) cache on CSR), not per step.
 
     PYTHONPATH=src python examples/gcn_spmm.py
 """
@@ -16,6 +17,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.models.layers import gcn_layer
 from repro.sparse import CSR, Schedule, matrix_stats, random_csr, spmm
 
 N_NODES, N_FEAT, N_CLASS = 256, 32, 4
@@ -40,16 +42,17 @@ labels = jnp.argmax(jnp.asarray(norm, jnp.float32) @ feats @ w_teacher,
                     axis=-1)
 params = {
     "w1": jnp.asarray(rng.standard_normal((N_FEAT, 64)) * 0.1, jnp.float32),
+    "b1": jnp.zeros((64,), jnp.float32),
     "w2": jnp.asarray(rng.standard_normal((64, N_CLASS)) * 0.1, jnp.float32),
 }
 
 
 def gcn_fwd(params, x):
-    # layer 1: Ã X W1  (aggregation = the paper's SpMM, scheduled kernel)
-    h = spmm(A, x @ params["w1"], schedule=sched)
-    h = jax.nn.relu(h)
-    h = spmm(A, h @ params["w2"], schedule=sched)
-    return h
+    # layer 1: act(Ã X W1 + b1) — ONE fused kernel (epilogue: bias+relu)
+    h = gcn_layer(A, x, params["w1"], params["b1"], activation="relu",
+                  schedule=sched)
+    # layer 2: logits, no activation — plain scheduled SpMM
+    return spmm(A, h @ params["w2"], schedule=sched)
 
 
 def loss_fn(params, x, y):

@@ -68,4 +68,26 @@ want = jax.ops.segment_sum(data, seg, num_segments=40)
 np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
                            atol=1e-4)
 print("custom strategy through the kernel: OK")
+
+# 4. Generalized monoids + fused epilogues (DESIGN.md §8): the same
+#    group machinery reduces with max (graph pooling), and a GCN layer's
+#    act(A@XW + b) runs as ONE kernel via the schedule epilogue.
+got_max = segment_reduce(seg, data, 40, op="max")
+np.testing.assert_allclose(
+    np.asarray(got_max),
+    np.asarray(jax.ops.segment_max(data, seg, num_segments=40)),
+    rtol=1e-4, atol=1e-4)
+print("segment_reduce(op='max') through the registry: OK")
+
+from repro.models.layers import gcn_layer  # noqa: E402
+
+w = jax.random.normal(jax.random.PRNGKey(2), (512, 16)) * 0.1
+bias = jax.random.normal(jax.random.PRNGKey(3), (16,))
+fused = gcn_layer(A, jnp.eye(512), w, bias, activation="relu",
+                  schedule="auto")
+np.testing.assert_allclose(
+    np.asarray(fused),
+    np.asarray(jax.nn.relu(spmm(A, w, impl="ref") + bias[None, :])),
+    rtol=1e-4, atol=1e-4)
+print("fused GCN layer (bias+relu epilogue, one kernel): OK")
 print("done")

@@ -10,6 +10,8 @@ from .atomic_parallelism import (  # noqa: F401
     to_schedule,
 )
 from .schedule import (  # noqa: F401
+    ACTIVATIONS,
+    Epilogue,
     ReductionStrategy,
     Schedule,
     as_schedule,
@@ -20,9 +22,13 @@ from .schedule import (  # noqa: F401
 )
 from .segment_group import (  # noqa: F401
     GroupReduceStrategy,
+    Monoid,
     SegmentGroup,
+    available_monoids,
+    get_monoid,
     group_waste_fraction,
     group_writeback_counts,
+    make_monoid,
     segment_group_reduce,
     segment_sum_ref,
 )

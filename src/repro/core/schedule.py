@@ -35,22 +35,31 @@ This module collapses them:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Dict, Optional, Tuple
 
 from .segment_group import (
+    MONOIDS,
     GroupReduceStrategy,
+    Monoid,
     SegmentGroup,
+    get_monoid,
+    make_monoid,
     spec_accumulate,
     spec_parallel,
     spec_segment,
 )
 
 __all__ = [
+    "ACTIVATIONS",
+    "Epilogue",
     "ReductionStrategy",
     "Schedule",
     "as_schedule",
     "attach_pallas_impl",
     "available_strategies",
+    "call_pallas_fn",
+    "call_spec_fn",
     "get_strategy",
     "register_strategy",
     "strategy_name",
@@ -73,12 +82,24 @@ class ReductionStrategy:
         in-kernel realization reducing ``partial`` (T, C) by ``rows`` (T,)
         into ``out_ref`` (S, C).  ``None`` means kernels run the spec on
         the tile and accumulate the result (correct, not tuned).
+    ``monoid``
+        the reduction monoid the strategy combines with (default add).
+        Built-in strategies are monoid-generic: ``get_strategy(name,
+        op="max")`` returns a variant entry carrying the max monoid.
+        Both fns may (but need not) take a ``monoid`` keyword; the
+        dispatchers pass it only when the signature accepts it, so 4-arg
+        user strategies keep working.
+    ``monoid_explicit``
+        the strategy was registered with its own ``combine``/``identity``
+        (such a strategy refuses a conflicting ``op=`` at dispatch).
     """
 
     name: str
     spec_fn: Callable
     pallas_fn: Optional[Callable] = None
     builtin: bool = False
+    monoid: Monoid = MONOIDS["add"]
+    monoid_explicit: bool = False
 
 
 _REGISTRY: Dict[str, ReductionStrategy] = {}
@@ -95,8 +116,16 @@ def strategy_name(strategy) -> str:
 
 def register_strategy(name: str, spec_fn: Callable,
                       pallas_fn: Optional[Callable] = None, *,
+                      combine: "Callable | str | None" = None,
+                      identity: float | None = None,
                       overwrite: bool = False) -> ReductionStrategy:
     """Register a user-defined reduction strategy under ``name``.
+
+    ``combine``/``identity`` fix the strategy's reduction monoid: pass a
+    registered monoid name ('max', 'min', ...) or a raw binary combine
+    plus its identity (it must be commutative and associative).  Left
+    unset, the strategy is monoid-generic over the add default and ops
+    may select another via their ``op=`` argument.
 
     Returns the registry entry.  Re-registering an existing name requires
     ``overwrite=True`` (note: jit caches keyed on the old entry are not
@@ -107,8 +136,21 @@ def register_strategy(name: str, spec_fn: Callable,
         raise ValueError(
             f"strategy {name!r} already registered "
             f"(available: {sorted(_REGISTRY)}); pass overwrite=True")
+    monoid, explicit = MONOIDS["add"], False
+    if combine is not None:
+        explicit = True
+        if isinstance(combine, str):
+            monoid = get_monoid(combine)
+        else:
+            if identity is None:
+                raise ValueError(
+                    "a callable combine needs its identity= scalar")
+            monoid = make_monoid(f"{name}-combine", combine, identity)
+    elif identity is not None:
+        raise ValueError("identity= is only meaningful with combine=")
     entry = ReductionStrategy(name=name, spec_fn=spec_fn,
-                              pallas_fn=pallas_fn)
+                              pallas_fn=pallas_fn, monoid=monoid,
+                              monoid_explicit=explicit)
     _REGISTRY[name] = entry
     return entry
 
@@ -123,16 +165,59 @@ def attach_pallas_impl(name: str, pallas_fn: Callable) -> ReductionStrategy:
     return entry
 
 
-def get_strategy(strategy) -> ReductionStrategy:
+def get_strategy(strategy, op=None) -> ReductionStrategy:
     name = strategy_name(strategy)
     try:
-        return _REGISTRY[name]
+        entry = _REGISTRY[name]
     except KeyError:
         raise ValueError(
             f"unknown reduction strategy {name!r}; "
             f"available: {sorted(_REGISTRY)} "
             f"(register new ones with repro.core.register_strategy)"
         ) from None
+    if op is None:
+        return entry
+    monoid = get_monoid(op)
+    if monoid == entry.monoid:
+        return entry
+    if entry.monoid_explicit:
+        if monoid == MONOIDS["add"]:
+            # 'add' is the unspecified default: the strategy's own
+            # registered combine wins
+            return entry
+        raise ValueError(
+            f"strategy {name!r} was registered with its own combine "
+            f"({entry.monoid.name}); it cannot run under op="
+            f"{monoid.name!r}")
+    return dataclasses.replace(entry, monoid=monoid)
+
+
+def _accepts_monoid(fn: Callable) -> bool:
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / partials without sigs
+        return False
+    return any(p.name == "monoid" or p.kind == p.VAR_KEYWORD
+               for p in params.values())
+
+
+def call_spec_fn(entry: ReductionStrategy, partials, seg_ids,
+                 num_segments: int, group_size: int):
+    """Invoke a strategy spec, passing the entry's monoid when the spec's
+    signature accepts it (4-arg user specs are called unchanged)."""
+    if _accepts_monoid(entry.spec_fn):
+        return entry.spec_fn(partials, seg_ids, num_segments, group_size,
+                             monoid=entry.monoid)
+    return entry.spec_fn(partials, seg_ids, num_segments, group_size)
+
+
+def call_pallas_fn(pallas_fn: Callable, rows, partial, out_ref,
+                   group_size: int, monoid: Monoid):
+    """Invoke an in-kernel realization, passing the monoid when its
+    signature accepts it (4-arg user realizations are called unchanged)."""
+    if _accepts_monoid(pallas_fn):
+        return pallas_fn(rows, partial, out_ref, group_size, monoid=monoid)
+    return pallas_fn(rows, partial, out_ref, group_size)
 
 
 def available_strategies() -> Tuple[str, ...]:
@@ -148,6 +233,125 @@ def _register_builtins() -> None:
 
 
 _register_builtins()
+
+
+# ---------------------------------------------------------------------------
+# Kernel epilogues
+# ---------------------------------------------------------------------------
+
+
+def _act_relu(x):
+    import jax.numpy as jnp
+
+    return jnp.maximum(x, 0.0)
+
+
+def _act_gelu(x):
+    import jax
+
+    return jax.nn.gelu(x)
+
+
+def _act_silu(x):
+    import jax
+
+    return jax.nn.silu(x)
+
+
+def _act_tanh(x):
+    import jax.numpy as jnp
+
+    return jnp.tanh(x)
+
+
+def _act_sigmoid(x):
+    import jax
+
+    return jax.nn.sigmoid(x)
+
+
+#: Activations an :class:`Epilogue` may name (applied in-kernel on the
+#: f32 accumulator before the dtype cast).
+ACTIVATIONS: Dict[str, Callable] = {
+    "relu": _act_relu,
+    "gelu": _act_gelu,
+    "silu": _act_silu,
+    "tanh": _act_tanh,
+    "sigmoid": _act_sigmoid,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Fused kernel epilogue spec (DESIGN.md §8).
+
+    Describes the *structure* of the post-reduction work a kernel applies
+    to its output block on the last reduction grid step — the arrays
+    themselves (bias vector, residual matrix) are passed to the op
+    alongside the data, so the spec stays static/hashable and can live on
+    a :class:`Schedule` (and in the tuner cache).
+
+    Semantics, in order:  ``y = act(acc + bias) + residual``, then cast
+    to ``out_dtype`` — i.e. a GCN layer's ``act(A @ XW + b)`` plus a
+    post-activation residual connection, in one pass over the nonzeros
+    instead of three HBM round trips.
+
+    activation   name in :data:`ACTIVATIONS` (or None);
+    bias         a (+ bias-row) add over output columns is fused;
+    residual     a post-activation element-wise residual add is fused;
+    out_dtype    dtype name the kernel casts the output block to
+                 (None = float32, the accumulator dtype).
+    """
+
+    activation: Optional[str] = None
+    bias: bool = False
+    residual: bool = False
+    out_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.activation is not None and self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown activation {self.activation!r}; "
+                f"known: {sorted(ACTIVATIONS)}")
+        if self.out_dtype is not None:
+            import numpy as np
+
+            np.dtype(self.out_dtype)  # raises on unknown names
+
+    @property
+    def is_noop(self) -> bool:
+        return not (self.activation or self.bias or self.residual
+                    or self.out_dtype)
+
+    @property
+    def tag(self) -> str:
+        """Compact identity string ('' when no-op) — used by the tuner's
+        schedule/cache keys."""
+        parts = []
+        if self.activation:
+            parts.append(self.activation)
+        if self.bias:
+            parts.append("b")
+        if self.residual:
+            parts.append("r")
+        if self.out_dtype:
+            parts.append(str(self.out_dtype))
+        return "+".join(parts)
+
+    def apply(self, acc, bias=None, residual=None):
+        """The executable spec: apply this epilogue to an accumulator
+        (also what the kernels run in-kernel on the output block)."""
+        import jax.numpy as jnp
+
+        if self.bias:
+            acc = acc + bias.astype(acc.dtype)
+        if self.activation:
+            acc = ACTIVATIONS[self.activation](acc)
+        if self.residual:
+            acc = acc + residual.astype(acc.dtype)
+        if self.out_dtype:
+            acc = acc.astype(jnp.dtype(self.out_dtype))
+        return acc
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +372,8 @@ class Schedule:
                 vestigial for 'rb' (single writeback per row).
     strategy    name of a registered reduction strategy ('segment',
                 'parallel', 'accumulate', or user-registered).
+    epilogue    fused post-reduction work (:class:`Epilogue`); the no-op
+                default keeps plain schedules unchanged.
     """
 
     kernel: str = "eb"
@@ -176,12 +382,17 @@ class Schedule:
     col_tile: int = 128
     group_size: int = 32
     strategy: str = "segment"
+    epilogue: Epilogue = Epilogue()
 
     def __post_init__(self):
         if self.kernel not in ("eb", "rb"):
             raise ValueError(f"kernel must be 'eb' or 'rb', got {self.kernel}")
         object.__setattr__(self, "strategy", strategy_name(self.strategy))
         get_strategy(self.strategy)  # raises on unregistered names
+        if self.epilogue is None:
+            object.__setattr__(self, "epilogue", Epilogue())
+        elif isinstance(self.epilogue, dict):
+            object.__setattr__(self, "epilogue", Epilogue(**self.epilogue))
         if self.kernel == "eb" and self.nnz_tile % self.group_size != 0:
             raise ValueError("nnz_tile must be a multiple of group_size")
 
@@ -276,11 +487,21 @@ class Schedule:
     def replace(self, **kw) -> "Schedule":
         return dataclasses.replace(self, **kw)
 
+    def with_epilogue(self, activation: Optional[str] = None, *,
+                      bias: bool = False, residual: bool = False,
+                      out_dtype: Optional[str] = None) -> "Schedule":
+        """This schedule with a fused epilogue attached."""
+        return self.replace(epilogue=Epilogue(
+            activation=activation, bias=bias, residual=residual,
+            out_dtype=out_dtype))
+
     def __str__(self):
         tile = (f"nnz_tile={self.nnz_tile}" if self.kernel == "eb"
                 else f"row_tile={self.row_tile}")
+        ep = ("" if self.epilogue.is_noop
+              else f", epilogue={self.epilogue.tag}")
         return (f"Schedule({self.kernel}, {tile}, col_tile={self.col_tile}, "
-                f"G={self.group_size}, strategy={self.strategy})")
+                f"G={self.group_size}, strategy={self.strategy}{ep})")
 
 
 def _lcm_tile(tile: int, group: int) -> int:

@@ -27,19 +27,32 @@ of each strategy — the oracle any kernel realization is tested against.
 (``core.schedule``), so user-registered strategies run through the same
 spec path; ``repro.kernels.common.group_reduce_scatter`` is the Pallas
 dispatcher over the same registry.
+
+Strategies are parameterized by a **reduction monoid** (``Monoid``): the
+combine operator, its identity, and the axis/segment reducers derived
+from it.  The built-in specs and kernel realizations are written against
+the monoid — sum is just the ``add`` instance (the only one the one-hot
+MXU matmul can realize, see ``Monoid.matmul_ok``); ``max``/``min`` run
+the same machinery with a masked reduce, which is what graph pooling
+(``segment_reduce(op="max")``) and the fused-attention row-max use.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 from functools import partial
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
     "GroupReduceStrategy",
+    "Monoid",
     "SegmentGroup",
+    "available_monoids",
+    "get_monoid",
+    "make_monoid",
     "segment_group_reduce",
     "segment_sum_ref",
     "spec_accumulate",
@@ -48,6 +61,90 @@ __all__ = [
     "group_writeback_counts",
     "group_waste_fraction",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Reduction monoids
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """A commutative reduction monoid: ``combine`` + its ``identity``.
+
+    ``reduce(x, axis)`` and ``seg_reduce(data, seg_ids, num_segments)``
+    are the derived axis / segment reducers (built-ins use the fused
+    ``jnp.sum``/``jax.ops.segment_max``-style primitives; custom monoids
+    get generic derivations from :func:`make_monoid`).  ``matmul_ok``
+    marks monoids whose one-hot reduce may run as an MXU matmul — true
+    only for ``add``, where ``dot(onehot.T, p)`` *is* the masked sum;
+    every other monoid uses the masked-``where`` reduce instead.
+    """
+
+    name: str
+    identity: float
+    combine: Callable  # (a, b) -> elementwise combine
+    reduce: Callable  # (x, axis) -> reduced along axis
+    seg_reduce: Callable  # (data (T, C), seg_ids (T,), num_segments) -> (S, C)
+    matmul_ok: bool = False
+
+
+def _seg_sum(data, seg_ids, num_segments):
+    return jax.ops.segment_sum(data, seg_ids, num_segments=num_segments)
+
+
+def _seg_max(data, seg_ids, num_segments):
+    return jax.ops.segment_max(data, seg_ids, num_segments=num_segments)
+
+
+def _seg_min(data, seg_ids, num_segments):
+    return jax.ops.segment_min(data, seg_ids, num_segments=num_segments)
+
+
+MONOIDS = {
+    "add": Monoid("add", 0.0, jnp.add, jnp.sum, _seg_sum, matmul_ok=True),
+    "max": Monoid("max", -jnp.inf, jnp.maximum, jnp.max, _seg_max),
+    "min": Monoid("min", jnp.inf, jnp.minimum, jnp.min, _seg_min),
+}
+MONOIDS["sum"] = MONOIDS["add"]  # alias
+
+
+def get_monoid(op) -> Monoid:
+    """Monoid for ``op`` (a name, a :class:`Monoid`, or ``None`` = add)."""
+    if op is None:
+        return MONOIDS["add"]
+    if isinstance(op, Monoid):
+        return op
+    try:
+        return MONOIDS[op]
+    except KeyError:
+        raise ValueError(
+            f"unknown reduction op {op!r}; available: "
+            f"{sorted(set(MONOIDS))} (or build one with make_monoid)"
+        ) from None
+
+
+def available_monoids():
+    return tuple(sorted(set(MONOIDS)))
+
+
+def make_monoid(name: str, combine: Callable, identity: float) -> Monoid:
+    """Monoid from a raw binary ``combine`` (must be commutative and
+    associative) and its ``identity``; the axis / segment reducers are
+    derived generically (spec-grade: the segment reduce materializes an
+    (S, T, C) mask product, fine for oracles, not for hot paths)."""
+
+    def reduce(x, axis):
+        return jax.lax.reduce(x, jnp.asarray(identity, x.dtype),
+                              lambda a, b: combine(a, b), (axis,))
+
+    def seg_reduce(data, seg_ids, num_segments):
+        mask = seg_ids[None, :] == jnp.arange(num_segments)[:, None]
+        expanded = jnp.where(mask[..., None], data[None], identity)
+        return reduce(expanded, 1)
+
+    return Monoid(name=name, identity=float(identity), combine=combine,
+                  reduce=reduce, seg_reduce=seg_reduce)
 
 
 class GroupReduceStrategy(enum.Enum):
@@ -86,16 +183,20 @@ def segment_sum_ref(partials: jax.Array, seg_ids: jax.Array, num_segments: int) 
 # ---------------------------------------------------------------------------
 # Per-strategy executable specs.  Common signature (the registry contract):
 #     spec(partials (T, C), seg_ids (T,), num_segments, group_size) -> (S, C)
+# Built-ins additionally accept ``monoid=`` (the dispatcher passes it when
+# the spec's signature does — user 4-arg specs keep working unchanged).
 # ---------------------------------------------------------------------------
 
 
-def spec_accumulate(partials, seg_ids, num_segments, group_size):
-    """ACCUMULATE: no intra-group combine; per-lane '+=' writeback."""
+def spec_accumulate(partials, seg_ids, num_segments, group_size, *,
+                    monoid: Monoid = MONOIDS["add"]):
+    """ACCUMULATE: no intra-group combine; per-lane combine-writeback."""
     del group_size
-    return segment_sum_ref(partials, seg_ids, num_segments)
+    return monoid.seg_reduce(partials, seg_ids, num_segments)
 
 
-def spec_parallel(partials, seg_ids, num_segments, group_size):
+def spec_parallel(partials, seg_ids, num_segments, group_size, *,
+                  monoid: Monoid = MONOIDS["add"]):
     """PARALLEL: one writeback lane per group.  *Asserts* (by construction)
     the single-writeback contract: every lane in a group must share the
     group's first segment id — lanes violating it are dropped, mirroring
@@ -107,19 +208,21 @@ def spec_parallel(partials, seg_ids, num_segments, group_size):
     gp = partials.reshape(n_groups, G, C)
     gs = seg_ids.reshape(n_groups, G)
     leader = gs[:, :1]  # single writeback segment per group
-    mask = (gs == leader).astype(partials.dtype)[..., None]
-    group_tot = jnp.sum(gp * mask, axis=1)  # (n_groups, C)
-    return jax.ops.segment_sum(group_tot, leader[:, 0],
-                               num_segments=num_segments)
+    mask = (gs == leader)[..., None]
+    group_tot = monoid.reduce(jnp.where(mask, gp, monoid.identity),
+                              1)  # (n_groups, C)
+    return monoid.seg_reduce(group_tot, leader[:, 0], num_segments)
 
 
-def spec_segment(partials, seg_ids, num_segments, group_size):
-    """SEGMENT: per-group one-hot reduce (what the Pallas kernel does on
-    the MXU), then cross-group carry accumulation.  Local segment ids are
-    offsets from the group's first segment, clamped into [0, G): with
-    non-decreasing seg_ids a group of G lanes spans at most G distinct
-    segments, but sparse matrices can skip ids, so lanes whose offset
-    overflows the local window fall back to accumulate-writeback."""
+def spec_segment(partials, seg_ids, num_segments, group_size, *,
+                 monoid: Monoid = MONOIDS["add"]):
+    """SEGMENT: per-group one-hot reduce (an MXU matmul for the add
+    monoid, a masked reduce otherwise), then cross-group carry
+    accumulation.  Local segment ids are offsets from the group's first
+    segment, clamped into [0, G): with non-decreasing seg_ids a group of
+    G lanes spans at most G distinct segments, but sparse matrices can
+    skip ids, so lanes whose offset overflows the local window fall back
+    to accumulate-writeback."""
     T, C = partials.shape
     G = group_size
     n_groups = T // G
@@ -131,25 +234,32 @@ def spec_segment(partials, seg_ids, num_segments, group_size):
     local_c = jnp.clip(local, 0, G - 1)
     onehot = jax.nn.one_hot(local_c, G, dtype=partials.dtype)
     onehot = onehot * in_window[..., None].astype(partials.dtype)
-    seg_tot = jnp.einsum("ngs,ngc->nsc", onehot, gp)  # (n_groups, G, C)
+    if monoid.matmul_ok:
+        seg_tot = jnp.einsum("ngs,ngc->nsc", onehot, gp)  # (n_groups, G, C)
+    else:
+        # masked reduce over lanes: slot s of group n combines the lanes
+        # whose local slot is s (identity elsewhere)
+        expanded = jnp.where(onehot.transpose(0, 2, 1)[..., None] > 0,
+                             gp[:, None, :, :], monoid.identity)
+        seg_tot = monoid.reduce(expanded, 2)  # (n_groups, G slots, C)
     # writeback: local slot s of group n targets global segment first[n]+s
     targets = jnp.clip(first + jnp.arange(G)[None, :], 0, num_segments - 1)
-    out = jax.ops.segment_sum(
-        seg_tot.reshape(-1, C), targets.reshape(-1), num_segments=num_segments
-    )
+    out = monoid.seg_reduce(seg_tot.reshape(-1, C), targets.reshape(-1),
+                            num_segments)
     # overflow lanes (rare: segment-id jumps > G inside one group)
-    ov_mask = (~in_window).astype(partials.dtype)[..., None]
-    ov = jax.ops.segment_sum(
-        (gp * ov_mask).reshape(-1, C),
+    ov = monoid.seg_reduce(
+        jnp.where((~in_window)[..., None], gp, monoid.identity).reshape(-1, C),
         jnp.clip(gs, 0, num_segments - 1).reshape(-1),
-        num_segments=num_segments,
+        num_segments,
     )
-    return out + ov
+    return monoid.combine(out, ov)
 
 
 @partial(jax.jit, static_argnames=("num_segments", "group_size", "entry"))
 def _dispatch_spec(partials, seg_ids, *, num_segments, group_size, entry):
-    return entry.spec_fn(partials, seg_ids, num_segments, group_size)
+    from .schedule import call_spec_fn
+
+    return call_spec_fn(entry, partials, seg_ids, num_segments, group_size)
 
 
 def segment_group_reduce(
@@ -158,22 +268,26 @@ def segment_group_reduce(
     num_segments: int,
     group_size: int = 32,
     strategy: "GroupReduceStrategy | str" = GroupReduceStrategy.SEGMENT,
+    op: "str | Monoid | None" = None,
 ) -> jax.Array:
     """Executable spec of grouped reduction with explicit group structure.
 
     ``strategy`` may be a :class:`GroupReduceStrategy`, the name of any
     registered strategy, or a registry entry; dispatch goes through the
     strategy registry, so user strategies registered with
-    ``repro.core.register_strategy`` run here unchanged.  Mathematically
-    equals ``segment_sum`` for SEGMENT/ACCUMULATE; see the per-strategy
-    ``spec_*`` docstrings for the contracts.
+    ``repro.core.register_strategy`` run here unchanged.  ``op`` selects
+    the reduction monoid ('add' default, 'max', 'min', or a
+    :class:`Monoid`); strategies registered with their own
+    ``combine``/``identity`` refuse a conflicting ``op``.  Mathematically
+    equals ``segment_sum`` for SEGMENT/ACCUMULATE under the add monoid;
+    see the per-strategy ``spec_*`` docstrings for the contracts.
     """
     from .schedule import get_strategy
 
     T = partials.shape[0]
     if T % group_size:
         raise ValueError(f"T={T} not a multiple of group_size={group_size}")
-    entry = get_strategy(strategy)
+    entry = get_strategy(strategy, op=op)
     return _dispatch_spec(partials, seg_ids, num_segments=num_segments,
                           group_size=group_size, entry=entry)
 

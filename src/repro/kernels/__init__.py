@@ -5,6 +5,10 @@ with the pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
 padding/format wrappers the framework calls.
 """
 from . import ref  # noqa: F401
+from .fused_attention import (  # noqa: F401
+    fused_sparse_attention,
+    sparse_attention_ref,
+)
 from .grouped_matmul import grouped_matmul  # noqa: F401
 from .ops import sddmm, spmm  # noqa: F401
 from .segment_reduce import segment_reduce  # noqa: F401

@@ -5,15 +5,24 @@ strategy registry (``repro.core.schedule``): it looks up the strategy by
 name and runs its in-kernel realization.  The built-in realizations live
 here and are attached to the registry at import time; a user strategy
 registered with only a pure-JAX spec falls back to running that spec on
-the whole tile and accumulating the result (correct, not tuned).
+the whole tile and combining the result (correct, not tuned).
+
+Every realization is written against the strategy's reduction *monoid*
+(``repro.core.Monoid``): the combine op, its identity, and the derived
+reducers.  Sum is the ``add`` instance; ``op="max"``/``"min"`` run the
+same machinery (graph pooling, the fused-attention row max).  The only
+monoid-conditional code is the MXU fast path: the one-hot matmul reduce
+is *algebraically* a masked sum, so it is used exactly when
+``monoid.matmul_ok`` — any other monoid takes the masked-``where``
+reduce.
 
 The built-in 'segment' realization is the TPU form of the paper's segment
 group (DESIGN.md §2): within each width-G group it
 
 1. finds segment runs (boundary cumsum — replaces the GPU's runtime
    writeback-thread election),
-2. reduces the run partials with a (G × G) one-hot matmul — the MXU
-   analogue of the warp shuffle tree,
+2. reduces the run partials with a (G × G) one-hot matmul (add monoid;
+   masked reduce otherwise) — the MXU analogue of the warp shuffle tree,
 3. writes each live run back with a read-modify-write into the output
    block — the analogue of the paper's multiple writeback threads; the
    sequential TPU grid makes the RMW race-free ("atomic" for free).
@@ -21,8 +30,13 @@ group (DESIGN.md §2): within each width-G group it
 Strategy variants:
   'segment'     full machinery above (runtime writeback targets);
   'parallel'    contract: all lanes of a group share one segment -> plain
-                sum + single writeback (one writeback thread);
+                within-group reduce + single writeback (one writeback
+                thread);
   'accumulate'  per-lane RMW (the atomicAdd baseline).
+
+``apply_epilogue`` is the shared last-grid-step epilogue applier
+(``core.Epilogue``): bias / activation / residual / dtype cast fused
+onto the output block (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -30,45 +44,62 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.schedule import attach_pallas_impl, get_strategy
+from ..core.schedule import (
+    MONOIDS,
+    Epilogue,
+    Monoid,
+    call_pallas_fn,
+    attach_pallas_impl,
+    get_strategy,
+)
+
+_ADD = MONOIDS["add"]
 
 
-def _rmw_row(out_ref, row, delta):
-    """out_ref[row, :] += delta  (delta shape (1, C)), dynamic row index."""
+def _rmw_row(out_ref, row, delta, combine):
+    """out_ref[row, :] = combine(out_ref[row, :], delta); delta (1, C),
+    dynamic row index."""
     idx = (pl.dslice(row, 1), slice(None))
-    out_ref[idx] = out_ref[idx] + delta
+    out_ref[idx] = combine(out_ref[idx], delta).astype(out_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
 # Built-in in-kernel realizations.  Registry contract:
-#     pallas_fn(rows (T,), partial (T, C), out_ref (R, C), group_size)
+#     pallas_fn(rows (T,), partial (T, C), out_ref (R, C), group_size,
+#               monoid=<Monoid>)
+# (the monoid keyword is passed iff the signature accepts it, so 4-arg
+# user realizations keep working — see core.schedule.call_pallas_fn).
 # ---------------------------------------------------------------------------
 
 
-def _pallas_accumulate(rows, partial, out_ref, group_size: int):
+def _pallas_accumulate(rows, partial, out_ref, group_size: int, *,
+                       monoid: Monoid = _ADD):
     T, _ = partial.shape
     del group_size
 
     def lane_body(t, _):
-        _rmw_row(out_ref, rows[t], partial[t][None, :])
+        _rmw_row(out_ref, rows[t], partial[t][None, :], monoid.combine)
         return 0
 
     jax.lax.fori_loop(0, T, lane_body, 0)
 
 
-def _pallas_parallel(rows, partial, out_ref, group_size: int):
+def _pallas_parallel(rows, partial, out_ref, group_size: int, *,
+                     monoid: Monoid = _ADD):
     T, C = partial.shape
     G = group_size
 
     def par_body(n, _):
         p = jax.lax.dynamic_slice(partial, (n * G, 0), (G, C))
-        _rmw_row(out_ref, rows[n * G], jnp.sum(p, axis=0)[None, :])
+        _rmw_row(out_ref, rows[n * G], monoid.reduce(p, 0)[None, :],
+                 monoid.combine)
         return 0
 
     jax.lax.fori_loop(0, T // G, par_body, 0)
 
 
-def _pallas_segment(rows, partial, out_ref, group_size: int):
+def _pallas_segment(rows, partial, out_ref, group_size: int, *,
+                    monoid: Monoid = _ADD):
     T, C = partial.shape
     G = group_size
 
@@ -81,12 +112,18 @@ def _pallas_segment(rows, partial, out_ref, group_size: int):
         onehot = (
             local[:, None]
             == jax.lax.broadcasted_iota(jnp.int32, (G, G), 1)
-        ).astype(p.dtype)  # (G lanes, G slots)
-        seg_tot = jnp.dot(onehot.T, p,
-                          preferred_element_type=jnp.float32)  # (G, C) MXU
+        )  # (G lanes, G slots) bool
+        if monoid.matmul_ok:
+            seg_tot = jnp.dot(onehot.astype(p.dtype).T, p,
+                              preferred_element_type=jnp.float32)  # MXU
+        else:
+            # masked reduce over lanes per slot (identity off-mask)
+            expanded = jnp.where(onehot.T[:, :, None], p[None, :, :],
+                                 monoid.identity)  # (slots, lanes, C)
+            seg_tot = monoid.reduce(expanded, 1)  # (G slots, C)
         # slot -> global row (slots past the last run get -1 = dead)
         seg_rows = jnp.max(
-            jnp.where(onehot > 0, r[:, None], -1), axis=0
+            jnp.where(onehot, r[:, None], -1), axis=0
         )  # (G,)
 
         def slot_body(s, _):
@@ -95,7 +132,8 @@ def _pallas_segment(rows, partial, out_ref, group_size: int):
             @pl.when(row >= 0)
             def _():
                 _rmw_row(out_ref, row,
-                         jax.lax.dynamic_slice(seg_tot, (s, 0), (1, C)))
+                         jax.lax.dynamic_slice(seg_tot, (s, 0), (1, C)),
+                         monoid.combine)
             return 0
 
         jax.lax.fori_loop(0, G, slot_body, 0)
@@ -104,21 +142,27 @@ def _pallas_segment(rows, partial, out_ref, group_size: int):
     jax.lax.fori_loop(0, T // G, group_body, 0)
 
 
-def spec_fallback_pallas(spec_fn):
+def spec_fallback_pallas(entry):
     """Bridge a pure-JAX strategy spec into the in-kernel contract: run the
     spec over the whole tile (num_segments = the output block height) and
-    accumulate.  Correct for any spec; no per-group tuning."""
+    combine into the block.  Correct for any spec; no per-group tuning."""
+    from ..core.schedule import call_spec_fn
 
-    def pallas_fn(rows, partial, out_ref, group_size: int):
-        out_ref[...] += spec_fn(partial, rows, out_ref.shape[0], group_size)
+    def pallas_fn(rows, partial, out_ref, group_size: int, *,
+                  monoid: Monoid = _ADD):
+        tile = call_spec_fn(entry, partial, rows, out_ref.shape[0],
+                            group_size)
+        out_ref[...] = monoid.combine(out_ref[...], tile).astype(
+            out_ref.dtype)
 
     return pallas_fn
 
 
 def group_reduce_scatter(rows, partial, out_ref, group_size: int,
-                         strategy: str = "segment"):
+                         strategy: str = "segment", op=None):
     """Reduce ``partial`` (T, C) by ``rows`` (T,) into ``out_ref`` (R, C)
-    with the registered strategy named ``strategy``.
+    with the registered strategy named ``strategy`` under the reduction
+    monoid ``op`` names ('add' default / 'max' / 'min' / a Monoid).
 
     ``rows`` need not be globally sorted; sorted input minimizes writebacks
     (each unsorted transition opens a new run — correct, just more RMWs),
@@ -126,9 +170,43 @@ def group_reduce_scatter(rows, partial, out_ref, group_size: int,
     """
     T, _ = partial.shape
     assert T % group_size == 0, (T, group_size)
-    entry = get_strategy(strategy)
-    fn = entry.pallas_fn or spec_fallback_pallas(entry.spec_fn)
-    fn(rows, partial, out_ref, group_size)
+    entry = get_strategy(strategy, op=op)
+    fn = entry.pallas_fn or spec_fallback_pallas(entry)
+    call_pallas_fn(fn, rows, partial, out_ref, group_size, entry.monoid)
+
+
+def split_epilogue_refs(refs, epilogue: Epilogue, narrowed: bool):
+    """Unpack a kernel's trailing refs under the shared epilogue operand
+    layout ``[bias?][residual?] out [f32 acc scratch if narrowed]`` —
+    one place encodes the positional contract for every epilogued
+    kernel.  Returns ``(bias_ref, res_ref, out_ref, acc_ref)`` with
+    ``acc_ref is None`` when the output block doubles as the
+    accumulator."""
+    acc_ref = refs[-1] if narrowed else None
+    extras = list(refs[:-2] if narrowed else refs[:-1])
+    out_ref = refs[-2] if narrowed else refs[-1]
+    bias_ref = extras.pop(0) if epilogue.bias else None
+    res_ref = extras.pop(0) if epilogue.residual else None
+    return bias_ref, res_ref, out_ref, acc_ref
+
+
+def apply_epilogue(out_ref, epilogue: Epilogue, bias_ref=None,
+                   res_ref=None, acc_ref=None):
+    """Apply an :class:`~repro.core.Epilogue` to a kernel's output block
+    in place — called on the *last* reduction grid step (under
+    ``pl.when``), when the accumulator holds the fully-reduced f32
+    result.  ``acc_ref`` is the f32 scratch accumulator kernels use when
+    ``out_dtype`` narrows the output (accumulation must stay f32; only
+    the final store casts); without it the output block doubles as the
+    accumulator."""
+    src = out_ref if acc_ref is None else acc_ref
+    acc = src[...].astype(jnp.float32)
+    acc = epilogue.apply(
+        acc,
+        bias=None if bias_ref is None else bias_ref[...],
+        residual=None if res_ref is None else res_ref[...],
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
 
 
 attach_pallas_impl("accumulate", _pallas_accumulate)

@@ -1,0 +1,204 @@
+"""Fused sparse attention: SDDMM → segment softmax → SpMM in ONE kernel.
+
+The motivating chain (graph attention / sparse transformer): for a
+sparsity pattern (rows, cols) over queries Q (n_rows, d), keys
+K (n_cols, d) and values V (n_cols, dv),
+
+    s[t]   = <Q[rows[t]], K[cols[t]]> * scale          (SDDMM)
+    w[t]   = softmax over {t' : rows[t'] = rows[t]}    (segment softmax)
+    out[r] = Σ_{t: rows[t]=r} w[t] * V[cols[t]]        (SpMM)
+
+Composed as three ops this costs three HBM round trips and materializes
+two (nnz,)-sized intermediates.  The fused kernel makes one pass over
+the nonzeros with FlashAttention-style *online renormalization* per
+output row: a running row max ``m`` and denominator ``l`` carried
+through the race-free sequential nnz grid —
+
+    per nnz tile i:   m_new = max(m, rowmax_i(s))          (max monoid
+                      α     = exp(m - m_new)                through the
+                      l     = l·α + rowsum_i(exp(s-m_new))  strategy
+                      acc   = acc·α + Σ exp(s-m_new)·V      registry)
+    last tile:        out   = acc / l
+
+The row max / row sum scatters run through ``group_reduce_scatter`` with
+the generalized monoids (``op="max"`` / add) — the first consumer of the
+monoid-generalized registry beyond ``segment_reduce``.
+
+Grid: (nnz_tiles, dv_tiles) — dv innermost.  The row statistics (m, l,
+α) are computed once per nnz tile (at the first dv step) and stored in
+(n_rows, 1) carry blocks revisited by every step; later dv steps of the
+same nnz tile replay the final ``m`` and the stored ``α``.  The scores
+``s`` (and probabilities) *are* recomputed per dv step — a deliberate
+compute-for-traffic trade (an (nnz_tile,) probability carry would save
+the d-length dots when dv spans several tiles; ROADMAP fusion
+follow-on).
+
+Padded lanes (trailing, from the nnz tile round-up) are masked by the
+static true ``nnz``: their scores are forced to the -1e30 floor and
+their probabilities to 0, so they contribute nothing to any row.  Empty
+rows come out as exact zeros (matching the spec oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import group_reduce_scatter
+
+NEG_INF = -1e30  # finite floor: keeps masked-lane arithmetic NaN-free
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX spec oracle
+# ---------------------------------------------------------------------------
+
+
+def sparse_softmax_weights(rows, cols, q, k, *, n_rows: int,
+                           scale: float):
+    """Spec of the SDDMM→segment-softmax front half: the normalized
+    per-nnz attention weights ``w``.  Shared by the forward oracle and
+    the custom VJP's recompute, so the numerically load-bearing details
+    (the empty-row isfinite guard, the 1e-30 denominator floor) cannot
+    desynchronize between forward and backward."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.sum(qf[rows] * kf[cols], axis=-1) * scale  # (nnz,)
+    m = jax.ops.segment_max(s, rows, num_segments=n_rows)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # empty rows: any finite value
+    p = jnp.exp(s - m[rows])
+    l = jax.ops.segment_sum(p, rows, num_segments=n_rows)
+    return p / jnp.maximum(l[rows], 1e-30)
+
+
+def sparse_attention_ref(rows, cols, q, k, v, *, n_rows: int,
+                         scale: float | None = None):
+    """Executable specification of the fused kernel (the oracle the
+    kernel and its VJP are tested against).  Empty rows -> zero rows."""
+    if scale is None:
+        scale = float(q.shape[-1]) ** -0.5
+    w = sparse_softmax_weights(rows, cols, q, k, n_rows=n_rows,
+                               scale=scale)
+    return jax.ops.segment_sum(w[:, None] * v.astype(jnp.float32)[cols],
+                               rows, num_segments=n_rows)
+
+
+# ---------------------------------------------------------------------------
+# The fused Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _fused_attn_kernel(rows_ref, cols_ref, q_ref, k_ref, v_ref,
+                       out_ref, m_ref, l_ref, a_ref, *,
+                       nnz: int, nnz_tile: int, scale: float,
+                       group_size: int, strategy: str):
+    i = pl.program_id(0)  # nnz tile (outer, sequential carry)
+    j = pl.program_id(1)  # dv tile (inner)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_stats():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(i == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    rows = rows_ref[...]
+    cols = cols_ref[...]
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+
+    # SDDMM front-end: per-lane scores, padded lanes floored to NEG_INF
+    lane = i * nnz_tile + jax.lax.broadcasted_iota(
+        jnp.int32, (nnz_tile,), 0)
+    valid = lane < nnz
+    s = jnp.sum(jnp.take(q, rows, axis=0) * jnp.take(k, cols, axis=0),
+                axis=-1) * scale
+    s = jnp.where(valid, s, NEG_INF)
+
+    @pl.when(j == 0)
+    def _update_stats():
+        m_old = m_ref[...]  # (R, 1)
+        # running row max: the max-monoid scatter through the registry
+        group_reduce_scatter(rows, s[:, None], m_ref, group_size,
+                             strategy, op="max")
+        m_new = m_ref[...]
+        alpha = jnp.where(m_old <= NEG_INF / 2, 0.0,
+                          jnp.exp(m_old - m_new))  # (R, 1)
+        a_ref[...] = alpha
+        p = jnp.where(valid,
+                      jnp.exp(jnp.where(valid, s, 0.0)
+                              - jnp.take(m_ref[...][:, 0], rows)), 0.0)
+        l_ref[...] = l_ref[...] * alpha
+        group_reduce_scatter(rows, p[:, None], l_ref, group_size,
+                             strategy)
+
+    # SpMM back-end (every dv step): rescale the accumulator by this nnz
+    # tile's α, then scatter-add the probability-weighted values
+    m_new = m_ref[...][:, 0]
+    p = jnp.where(valid,
+                  jnp.exp(jnp.where(valid, s, 0.0) - jnp.take(m_new, rows)),
+                  0.0)
+    vj = v_ref[...].astype(jnp.float32)  # (n_cols, dv_tile)
+    out_ref[...] = out_ref[...] * a_ref[...]
+    group_reduce_scatter(rows, p[:, None] * jnp.take(vj, cols, axis=0),
+                         out_ref, group_size, strategy)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _normalize():
+        out_ref[...] = out_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows", "nnz", "nnz_tile", "dv_tile", "scale",
+                     "group_size", "strategy", "interpret"),
+)
+def fused_sparse_attention(rows, cols, q, k, v, *, n_rows: int, nnz: int,
+                           nnz_tile: int = 256, dv_tile: int = 128,
+                           scale: float, group_size: int = 32,
+                           strategy: str = "segment",
+                           interpret: bool = True):
+    """One-pass SDDMM→softmax→SpMM.  Inputs pre-padded by the wrapper:
+    rows/cols (nnz_pad,) with nnz_pad % nnz_tile == 0 (``nnz`` is the
+    true count — trailing pad lanes are masked in-kernel), v's feature
+    axis padded to dv_tile.  Returns (out (n_rows, dv_pad), m, l) — the
+    row statistics are exposed for diagnostics; ``out`` is final.
+    """
+    nnz_pad = rows.shape[0]
+    n_q, d = q.shape
+    n_kv, dv = v.shape
+    assert nnz_pad % nnz_tile == 0 and dv % dv_tile == 0, (nnz_pad, dv)
+    assert n_q == n_rows and k.shape == (n_kv, d)
+    grid = (nnz_pad // nnz_tile, dv // dv_tile)
+
+    kernel = functools.partial(
+        _fused_attn_kernel, nnz=nnz, nnz_tile=nnz_tile, scale=scale,
+        group_size=group_size, strategy=strategy)
+    stat_spec = pl.BlockSpec((n_rows, 1), lambda i, j: (0, 0))
+    out, m, l, _alpha = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nnz_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((nnz_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((n_rows, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((n_kv, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((n_kv, dv_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_rows, dv_tile), lambda i, j: (0, j)),
+            stat_spec, stat_spec, stat_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, dv), jnp.float32),
+            jax.ShapeDtypeStruct((n_rows, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_rows, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rows, cols, q, k, v)
+    return out, m, l

@@ -62,40 +62,74 @@ def schedule_fits_vmem(sched: Schedule, *, n_rows: int, n_cols: int,
     return need <= budget
 
 
-def spmm(a, b, schedule: Schedule | None = None, *,
-         impl: str = "pallas", interpret: bool = True):
-    """out = A @ B for sparse A (CSR / GroupedCOO / ELL) and dense B.
+def _pad_epilogue_operands(ep, bias, residual, n_rows, n_pad):
+    """Pad the epilogue's array operands to the kernel layout: bias
+    (1, n_pad), residual (n_rows, n_pad).  Presence was validated by
+    ``spmm`` before the impl branch (ref and pallas fail identically)."""
+    bias_p = res_p = None
+    if ep.bias:
+        bias_p = jnp.reshape(bias, (1, -1))
+        bias_p = jnp.pad(bias_p, ((0, 0), (0, n_pad - bias_p.shape[1])))
+    if ep.residual:
+        res_p = jnp.pad(residual, ((0, n_rows - residual.shape[0]),
+                                   (0, n_pad - residual.shape[1])))
+    return bias_p, res_p
 
-    impl='ref' runs the pure-jnp oracle; impl='pallas' runs the kernel the
-    schedule selects (eb -> GroupedCOO path, rb -> ELL path).  CSR inputs
-    convert through the per-(format, tile) cache on CSR.
+
+def spmm(a, b, schedule: Schedule | None = None, *,
+         bias=None, residual=None, impl: str = "pallas",
+         interpret: bool = True):
+    """out = A @ B for sparse A (CSR / GroupedCOO / ELL) and dense B,
+    with the schedule's fused epilogue applied in-kernel.
+
+    impl='ref' runs the pure-jnp oracle (epilogue applied via its
+    executable spec); impl='pallas' runs the kernel the schedule selects
+    (eb -> GroupedCOO path, rb -> ELL path).  CSR inputs convert through
+    the per-(format, tile) cache on CSR.  ``bias`` (N,) / ``residual``
+    (n_rows, N) are required exactly when ``schedule.epilogue`` declares
+    them.
     """
     if schedule is None:
         schedule = Schedule("eb")
+    ep = schedule.epilogue
+    if ep.bias and bias is None:
+        raise ValueError("schedule epilogue declares bias=True but no "
+                         "bias array was passed")
+    if ep.residual and residual is None:
+        raise ValueError("schedule epilogue declares residual=True but "
+                         "no residual array was passed")
 
     if impl == "ref":
         if isinstance(a, GroupedCOO):
-            return ref.spmm_coo_ref(a.rows, a.cols, a.vals, b, a.shape[0])
-        if isinstance(a, CSR):
+            out = ref.spmm_coo_ref(a.rows, a.cols, a.vals, b, a.shape[0])
+        elif isinstance(a, CSR):
             coo = a.tocoo()
-            return ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, b, a.shape[0])
-        if isinstance(a, ELL):
-            return ref.spmm_ell_ref(a.cols, a.vals, b, a.shape[0])
-        raise TypeError(type(a))
+            out = ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, b,
+                                   a.shape[0])
+        elif isinstance(a, ELL):
+            out = ref.spmm_ell_ref(a.cols, a.vals, b, a.shape[0])
+        else:
+            raise TypeError(type(a))
+        if ep.is_noop:
+            return out
+        return ep.apply(out, bias=bias, residual=residual)
 
     col_tile = min(schedule.col_tile, round_up(b.shape[1], 8))
     b_pad, n = _pad_cols(b, col_tile)
+    n_pad = b_pad.shape[1]
 
     if schedule.kernel == "eb":
         if isinstance(a, CSR):
             a = a.grouped(schedule.nnz_tile)
         assert isinstance(a, GroupedCOO), type(a)
-        if a.nnz_tile != schedule.nnz_tile:
-            a = _regroup(a, schedule.nnz_tile)
+        a = a.regrouped(schedule.nnz_tile)  # memoized; no-op on match
+        bias_p, res_p = _pad_epilogue_operands(ep, bias, residual,
+                                               a.shape[0], n_pad)
         out = _spmm_eb(
             a.rows, a.cols, a.vals, b_pad, n_rows=a.shape[0],
             nnz_tile=schedule.nnz_tile, col_tile=col_tile,
             group_size=schedule.group_size, strategy=schedule.strategy,
+            epilogue=ep, bias=bias_p, residual=res_p,
             interpret=interpret)
         return out[:, :n]
 
@@ -109,37 +143,30 @@ def spmm(a, b, schedule: Schedule | None = None, *,
         pad = r_pad - a.n_rows_padded
         ecols = jnp.pad(ecols, ((0, pad), (0, 0)))
         evals = jnp.pad(evals, ((0, pad), (0, 0)))
+    bias_p, res_p = _pad_epilogue_operands(ep, bias, residual, r_pad, n_pad)
     out = _spmm_rb(ecols, evals, b_pad, row_tile=schedule.row_tile,
-                   col_tile=col_tile, interpret=interpret)
+                   col_tile=col_tile, epilogue=ep, bias=bias_p,
+                   residual=res_p, interpret=interpret)
     return out[: a.shape[0], :n]
-
-
-def _regroup(a: GroupedCOO, nnz_tile: int) -> GroupedCOO:
-    """Re-pad a GroupedCOO to a different tile size."""
-    nnz = a.nnz
-    padded = max(round_up(max(nnz, 1), nnz_tile), nnz_tile)
-    rows, cols, vals = a.rows[:nnz], a.cols[:nnz], a.vals[:nnz]
-    pad = padded - nnz
-    return GroupedCOO(
-        rows=jnp.concatenate([rows, jnp.full((pad,), a.shape[0] - 1, jnp.int32)]),
-        cols=jnp.concatenate([cols, jnp.zeros((pad,), jnp.int32)]),
-        vals=jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)]),
-        shape=a.shape, nnz=nnz, nnz_tile=nnz_tile)
 
 
 def sddmm(rows, cols, a, b, scale=None, *, nnz_tile: int = 256,
           impl: str = "pallas", interpret: bool = True):
-    """vals[t] = <A[rows[t]], B[cols[t]]> (* scale[t]); rows/cols (nnz,)."""
+    """vals[t] = <A[rows[t]], B[cols[t]]> (* scale[t]); rows/cols (nnz,).
+
+    ``scale=None`` skips the scale operand entirely (no ``ones((nnz,))``
+    materialized per call): padded lanes are legal by the zero-extension
+    rule — padding is strictly trailing and cropped by ``out[:nnz]``.
+    """
     if impl == "ref":
         return ref.sddmm_ref(rows, cols, a, b, scale)
     nnz = rows.shape[0]
     nnz_pad = round_up(max(nnz, 1), nnz_tile)
-    if scale is None:
-        scale = jnp.ones((nnz,), jnp.float32)
     pad = nnz_pad - nnz
     rows_p = jnp.pad(rows, (0, pad))
     cols_p = jnp.pad(cols, (0, pad))
-    scale_p = jnp.pad(scale, (0, pad))  # zero scale masks padded lanes
+    # zero scale masks padded lanes (None: trailing garbage is cropped)
+    scale_p = None if scale is None else jnp.pad(scale, (0, pad))
     d = a.shape[1]
     d_tile = min(128, round_up(d, 8))
     d_pad = round_up(d, d_tile)

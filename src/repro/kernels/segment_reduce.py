@@ -1,14 +1,18 @@
-"""Standalone segment-group reduce kernel: out[s] = Σ_{t: seg[t]=s} data[t].
+"""Standalone segment-group reduce kernel:
+out[s] = ⨁_{t: seg[t]=s} data[t] for a registered strategy × monoid ⨁.
 
 The paper's ``segReduceWarp<T, G>`` macro instruction (Sgap §5.3) as a
 first-class Pallas kernel: the same group machinery as ``spmm_eb`` minus
-the gather/multiply front-end. Used directly by the SSD chunk combine and
-as the microbenchmark target for Table 1/2.
+the gather/multiply front-end. Used directly by the SSD chunk combine,
+the fused-attention row statistics, and as the microbenchmark target for
+Table 1/2.
 
-Ragged inputs are zero-extended here (the same padding glue ``spmm`` has):
-``seg_ids`` is padded with ``num_segments - 1`` and ``data`` with zero
-rows up to the next ``tile`` multiple, so padded lanes reduce into a live
-segment but contribute nothing.
+``op`` selects the reduction monoid ('add' default, 'max', 'min') — the
+monoid generalization of the zero-extension rule pads ragged inputs with
+the monoid *identity* instead of zero: padded lanes target segment
+``num_segments - 1`` carrying identity rows, so they flow through the
+datapath and contribute nothing, for any monoid.  Untouched segments
+come out as the identity (matching ``jax.ops.segment_max`` etc.).
 """
 from __future__ import annotations
 
@@ -18,45 +22,54 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.schedule import get_strategy
 from ..sparse.formats import round_up
 from .common import group_reduce_scatter
 
 
-def _segred_kernel(seg_ref, data_ref, out_ref, *, group_size, strategy):
+def _segred_kernel(seg_ref, data_ref, out_ref, *, group_size, strategy,
+                   op):
+    # identity resolved through the registry: a strategy registered with
+    # its own combine/identity initializes with *its* identity
+    identity = get_strategy(strategy, op=op).monoid.identity
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        out_ref[...] = jnp.full_like(out_ref, identity)
 
     group_reduce_scatter(
         seg_ref[...], data_ref[...].astype(jnp.float32), out_ref,
-        group_size, strategy)
+        group_size, strategy, op=op)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("num_segments", "tile", "group_size", "strategy",
-                     "interpret"),
+                     "op", "interpret"),
 )
 def segment_reduce(seg_ids, data, *, num_segments: int, tile: int = 256,
                    group_size: int = 32, strategy: str = "segment",
-                   interpret: bool = True):
+                   op: str = "add", interpret: bool = True):
     """seg_ids: (T,) non-decreasing; data: (T, C).  T may be ragged — both
-    inputs are zero-extended to the next ``tile`` multiple (padding lanes
-    target segment ``num_segments - 1`` with zero data).  ``strategy`` is
-    the name of any registered reduction strategy."""
+    inputs are identity-extended to the next ``tile`` multiple (padding
+    lanes target segment ``num_segments - 1`` with identity data).
+    ``strategy`` is the name of any registered reduction strategy; ``op``
+    names the reduction monoid ('add' / 'max' / 'min')."""
     if tile % group_size:
         raise ValueError(f"tile={tile} not a multiple of "
                          f"group_size={group_size}")
+    monoid = get_strategy(strategy, op=op).monoid
     t, c = data.shape
     t_pad = round_up(max(t, 1), tile)
     if t_pad != t:
         pad = t_pad - t
         seg_ids = jnp.concatenate(
             [seg_ids, jnp.full((pad,), num_segments - 1, seg_ids.dtype)])
-        data = jnp.concatenate([data, jnp.zeros((pad, c), data.dtype)])
+        data = jnp.concatenate(
+            [data, jnp.full((pad, c), monoid.identity, data.dtype)])
     grid = (1, t_pad // tile)
     kernel = functools.partial(
-        _segred_kernel, group_size=group_size, strategy=strategy)
+        _segred_kernel, group_size=group_size, strategy=strategy, op=op)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -10,6 +10,10 @@ Per grid cell (one ``NNZ_TILE × COL_TILE`` block):
   2. scale by values        P = vals ⊙ B[cols]
   3. segment-group reduce   width-G one-hot MXU reduce + runtime
                             writeback (see kernels/common.py)
+  4. on the *last* nnz step of a column block: the fused epilogue
+     (bias / activation / residual / dtype cast — DESIGN.md §8), so a
+     GCN layer's ``act(A @ XW + b)`` is one kernel instead of three HBM
+     round trips.
 
 VMEM working set per cell:  B block (K × COL_TILE) + partials
 (NNZ_TILE × COL_TILE) + out block (n_rows × COL_TILE). The kernel targets
@@ -24,14 +28,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import group_reduce_scatter
+from ..core.schedule import Epilogue
+from .common import apply_epilogue, group_reduce_scatter, split_epilogue_refs
+
+_NOOP = Epilogue()
 
 
-def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, out_ref, *,
-                    group_size: int, strategy: str):
+def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, *refs,
+                    group_size: int, strategy: str, epilogue: Epilogue,
+                    narrowed: bool):
+    bias_ref, res_ref, out_ref, acc_ref = split_epilogue_refs(
+        refs, epilogue, narrowed)
+    # out_dtype narrowing: accumulate in the f32 scratch, cast only at
+    # the final store (out_ref doubles as the accumulator otherwise)
+    acc = out_ref if acc_ref is None else acc_ref
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        acc[...] = jnp.zeros_like(acc)
 
     rows = rows_ref[...]
     cols = cols_ref[...]
@@ -40,18 +54,28 @@ def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, out_ref, *,
 
     gathered = jnp.take(b, cols, axis=0)  # (T, C)
     partial = gathered * vals[:, None]
-    group_reduce_scatter(rows, partial, out_ref, group_size, strategy)
+    group_reduce_scatter(rows, partial, acc, group_size, strategy)
+
+    if not epilogue.is_noop:
+        @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+        def _epilogue():
+            apply_epilogue(out_ref, epilogue, bias_ref, res_ref,
+                           acc_ref=acc_ref)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("n_rows", "nnz_tile", "col_tile", "group_size",
-                     "strategy", "interpret"),
+                     "strategy", "epilogue", "interpret"),
 )
 def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
             col_tile: int = 128, group_size: int = 32,
-            strategy: str = "segment", interpret: bool = True):
-    """out (n_rows, N) = scatter-reduce over padded COO triplets × B.
+            strategy: str = "segment", epilogue: Epilogue = _NOOP,
+            bias=None, residual=None, interpret: bool = True):
+    """out (n_rows, N) = scatter-reduce over padded COO triplets × B,
+    with the fused ``epilogue`` applied to each output block on its last
+    reduction step (``bias`` (1, N) and ``residual`` (n_rows, N) are
+    required/forbidden per the epilogue's flags).
 
     Inputs must be pre-padded: len(vals) % nnz_tile == 0 (see
     ``formats.GroupedCOO``) and b.shape[1] % col_tile == 0 (``ops.spmm``
@@ -62,18 +86,39 @@ def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
     assert nnz_pad % nnz_tile == 0 and n % col_tile == 0, (nnz_pad, n)
     grid = (n // col_tile, nnz_pad // nnz_tile)
 
+    operands = [rows, cols, vals, b]
+    in_specs = [
+        pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
+        pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
+        pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
+        pl.BlockSpec((k, col_tile), lambda j, i: (0, j)),
+    ]
+    if epilogue.bias:
+        assert bias is not None and bias.shape == (1, n), (n, bias)
+        operands.append(bias)
+        in_specs.append(pl.BlockSpec((1, col_tile), lambda j, i: (0, j)))
+    if epilogue.residual:
+        assert residual is not None and residual.shape == (n_rows, n)
+        operands.append(residual)
+        in_specs.append(
+            pl.BlockSpec((n_rows, col_tile), lambda j, i: (0, j)))
+    out_dtype = jnp.dtype(epilogue.out_dtype or jnp.float32)
+    narrowed = out_dtype != jnp.float32
+    scratch = []
+    if narrowed:
+        from jax.experimental.pallas import tpu as pltpu
+
+        scratch = [pltpu.VMEM((n_rows, col_tile), jnp.float32)]
+
     kernel = functools.partial(
-        _spmm_eb_kernel, group_size=group_size, strategy=strategy)
+        _spmm_eb_kernel, group_size=group_size, strategy=strategy,
+        epilogue=epilogue, narrowed=narrowed)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
-            pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
-            pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
-            pl.BlockSpec((k, col_tile), lambda j, i: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((n_rows, col_tile), lambda j, i: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((n_rows, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_rows, n), out_dtype),
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(rows, cols, vals, b)
+    )(*operands)

@@ -6,7 +6,9 @@ zero extension the paper legitimizes: padded slots gather B[0] scaled by
 0.0 and flow through the vector datapath unpredicated.
 
 Grid: (row_tiles, col_tiles, width_tiles) — width innermost, accumulating
-into the same (ROW_TILE × COL_TILE) output block.
+into the same (ROW_TILE × COL_TILE) output block; the fused epilogue
+(``core.Epilogue``: bias / activation / residual / dtype cast) runs on
+the last width step, when the block holds the fully-reduced row.
 """
 from __future__ import annotations
 
@@ -16,11 +18,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.schedule import Epilogue
+from .common import apply_epilogue, split_epilogue_refs
 
-def _spmm_rb_kernel(cols_ref, vals_ref, b_ref, out_ref):
+_NOOP = Epilogue()
+
+
+def _spmm_rb_kernel(cols_ref, vals_ref, b_ref, *refs,
+                    epilogue: Epilogue, narrowed: bool):
+    bias_ref, res_ref, out_ref, acc_ref = split_epilogue_refs(
+        refs, epilogue, narrowed)
+    # out_dtype narrowing: accumulate in the f32 scratch, cast only at
+    # the final store (out_ref doubles as the accumulator otherwise)
+    acc = out_ref if acc_ref is None else acc_ref
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        acc[...] = jnp.zeros_like(acc)
 
     cols = cols_ref[...]  # (R, Wt)
     vals = vals_ref[...].astype(jnp.float32)  # (R, Wt)
@@ -28,16 +42,27 @@ def _spmm_rb_kernel(cols_ref, vals_ref, b_ref, out_ref):
 
     r, wt = cols.shape
     gathered = jnp.take(b, cols.reshape(-1), axis=0).reshape(r, wt, -1)
-    out_ref[...] += jnp.sum(vals[..., None] * gathered, axis=1)
+    acc[...] += jnp.sum(vals[..., None] * gathered,
+                        axis=1).astype(acc.dtype)
+
+    if not epilogue.is_noop:
+        @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+        def _epilogue():
+            apply_epilogue(out_ref, epilogue, bias_ref, res_ref,
+                           acc_ref=acc_ref)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("row_tile", "col_tile", "width_tile", "interpret"),
+    static_argnames=("row_tile", "col_tile", "width_tile", "epilogue",
+                     "interpret"),
 )
 def spmm_rb(ecols, evals, b, *, row_tile: int = 8, col_tile: int = 128,
-            width_tile: int | None = None, interpret: bool = True):
-    """out (R_pad, N) from ELL arrays (R_pad, W) and dense B (K, N).
+            width_tile: int | None = None, epilogue: Epilogue = _NOOP,
+            bias=None, residual=None, interpret: bool = True):
+    """out (R_pad, N) from ELL arrays (R_pad, W) and dense B (K, N), with
+    the fused ``epilogue`` applied per output block on its last width
+    step (``bias`` (1, N) / ``residual`` (R_pad, N) per its flags).
 
     R_pad % row_tile == 0 and N % col_tile == 0 are the wrapper's job
     (``ops.spmm``); W is padded to width_tile here.
@@ -54,15 +79,37 @@ def spmm_rb(ecols, evals, b, *, row_tile: int = 8, col_tile: int = 128,
     assert r_pad % row_tile == 0 and n % col_tile == 0
 
     grid = (r_pad // row_tile, n // col_tile, w_pad // width_tile)
+    operands = [ecols, evals, b]
+    in_specs = [
+        pl.BlockSpec((row_tile, width_tile), lambda i, j, u: (i, u)),
+        pl.BlockSpec((row_tile, width_tile), lambda i, j, u: (i, u)),
+        pl.BlockSpec((k, col_tile), lambda i, j, u: (0, j)),
+    ]
+    if epilogue.bias:
+        assert bias is not None and bias.shape == (1, n), (n, bias)
+        operands.append(bias)
+        in_specs.append(pl.BlockSpec((1, col_tile), lambda i, j, u: (0, j)))
+    if epilogue.residual:
+        assert residual is not None and residual.shape == (r_pad, n)
+        operands.append(residual)
+        in_specs.append(
+            pl.BlockSpec((row_tile, col_tile), lambda i, j, u: (i, j)))
+    out_dtype = jnp.dtype(epilogue.out_dtype or jnp.float32)
+    narrowed = out_dtype != jnp.float32
+    scratch = []
+    if narrowed:
+        from jax.experimental.pallas import tpu as pltpu
+
+        scratch = [pltpu.VMEM((row_tile, col_tile), jnp.float32)]
+
+    kernel = functools.partial(_spmm_rb_kernel, epilogue=epilogue,
+                               narrowed=narrowed)
     return pl.pallas_call(
-        _spmm_rb_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((row_tile, width_tile), lambda i, j, u: (i, u)),
-            pl.BlockSpec((row_tile, width_tile), lambda i, j, u: (i, u)),
-            pl.BlockSpec((k, col_tile), lambda i, j, u: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((row_tile, col_tile), lambda i, j, u: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r_pad, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((r_pad, n), out_dtype),
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(ecols, evals, b)
+    )(*operands)

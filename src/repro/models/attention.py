@@ -177,6 +177,32 @@ def _flash_bwd(causal, q_chunk, kv_chunk, res, do):
 flash_attention.defvjp(_flash_fwd, _flash_bwd)
 
 
+def graph_attention(adj, q, k, v, *, schedule=None, scale=None,
+                    interpret: bool = True):
+    """Sparse (graph) attention over an adjacency pattern through the
+    fused one-pass SDDMM→softmax→SpMM kernel
+    (``repro.sparse.sparse_attention``).
+
+    Single-head: q (n_rows, d), k/v (n_cols, d/dv).  Multi-head: q
+    (n_rows, H, d) with k/v (n_cols, H, ·) — heads share the sparsity
+    pattern and run the kernel per head (the pattern conversion is
+    cached on the CSR, so H heads pay it once).
+    """
+    from ..sparse import sparse_attention
+
+    if q.ndim == 2:
+        return sparse_attention(adj, q, k, v, schedule=schedule,
+                                scale=scale, interpret=interpret)
+    assert q.ndim == 3 and k.ndim == 3 and v.ndim == 3, (q.shape, k.shape)
+    outs = [sparse_attention(adj, q[:, h], k[:, h], v[:, h],
+                             schedule=schedule, scale=scale,
+                             interpret=interpret)
+            for h in range(q.shape[1])]
+    import jax.numpy as _jnp
+
+    return _jnp.stack(outs, axis=1)
+
+
 def attention_ref(q, k, v, causal=True):
     """Naive reference for tests."""
     b, sq, h, dh = q.shape

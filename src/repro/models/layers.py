@@ -71,6 +71,25 @@ def apply_norm(cfg, p, x):
     return layernorm(x, p["scale"], p["bias"])
 
 
+# ------------------------------------------------------- fused sparse
+
+
+def gcn_layer(adj, x, w, b=None, *, activation="relu", residual=None,
+              schedule="auto", interpret: bool = True):
+    """One GCN layer, fused: ``act(Ã (x @ w) + b) [+ residual]`` runs as a
+    *single* scheduled SpMM kernel with an in-kernel epilogue
+    (DESIGN.md §8) instead of three HBM passes (spmm → bias-add → act).
+    Differentiable in ``x``/``w``/``b``/``residual`` through the sparse
+    custom VJP."""
+    from ..core.schedule import Epilogue
+    from ..sparse import spmm
+
+    ep = Epilogue(activation=activation, bias=b is not None,
+                  residual=residual is not None)
+    return spmm(adj, x @ w, schedule=schedule, bias=b, residual=residual,
+                epilogue=ep, interpret=interpret)
+
+
 # ---------------------------------------------------------------- linear
 
 

@@ -1,16 +1,17 @@
 """repro.sparse — the single public sparse API.
 
 Formats (`CSR`, `COO`, `GroupedCOO`, `ELL`), generators (`random_csr`),
-the unified ops (`spmm`, `sddmm`, `segment_reduce`, all taking
-``schedule=``), and the scheduling surface re-exported from core
-(`Schedule`, `register_strategy`).
+the unified ops (`spmm`, `sddmm`, `segment_reduce`, `sparse_attention`,
+all taking ``schedule=``), and the scheduling surface re-exported from
+core (`Schedule`, `Epilogue`, `register_strategy`).
 """
 from ..core.schedule import (  # noqa: F401
+    Epilogue,
     Schedule,
     as_schedule,
     available_strategies,
     register_strategy,
 )
 from .formats import COO, CSR, ELL, GroupedCOO  # noqa: F401
-from .ops import sddmm, segment_reduce, spmm  # noqa: F401
+from .ops import sddmm, segment_reduce, sparse_attention, spmm  # noqa: F401
 from .random import matrix_stats, random_coo, random_csr  # noqa: F401

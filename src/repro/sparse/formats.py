@@ -37,6 +37,28 @@ def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _instance_cache(obj, arrays):
+    """Per-instance conversion memo, or None while being traced (caching
+    tracers would leak them across jit traces).  Deliberately not part of
+    the pytree: transformed copies start cold."""
+    if any(isinstance(x, jax.core.Tracer) for x in arrays):
+        return None
+    cache = obj.__dict__.get("_convcache")
+    if cache is None:
+        cache = {}
+        object.__setattr__(obj, "_convcache", cache)
+    return cache
+
+
+def _memoized(obj, arrays, key, build):
+    cache = _instance_cache(obj, arrays)
+    if cache is None:
+        return build()
+    if key not in cache:
+        cache[key] = build()
+    return cache[key]
+
+
 def _csr_scatter_index(indptr):
     """(row_ids, positions) int arrays: nnz t of CSR row r lands in ELL
     slot ``t - indptr[r]``.  Shared by ``ELL.fromcsr`` and
@@ -104,25 +126,9 @@ class CSR:
 
     # -- conversion caching ------------------------------------------------
 
-    def _cache(self):
-        """Per-instance conversion memo, or None while being traced
-        (caching tracers would leak them across jit traces)."""
-        if any(isinstance(x, jax.core.Tracer)
-               for x in (self.indptr, self.indices, self.vals)):
-            return None
-        cache = self.__dict__.get("_convcache")
-        if cache is None:
-            cache = {}
-            object.__setattr__(self, "_convcache", cache)
-        return cache
-
     def _cached(self, key, build):
-        cache = self._cache()
-        if cache is None:
-            return build()
-        if key not in cache:
-            cache[key] = build()
-        return cache[key]
+        return _memoized(self, (self.indptr, self.indices, self.vals),
+                         key, build)
 
     def tocoo(self) -> "COO":
         # expand indptr -> per-nnz row ids (format-time searchsorted: this
@@ -237,6 +243,32 @@ class GroupedCOO:
         vals = jnp.concatenate([coo.vals, jnp.zeros((pad,), coo.vals.dtype)])
         return GroupedCOO(rows=rows, cols=cols, vals=vals, shape=csr.shape,
                           nnz=nnz, nnz_tile=nnz_tile)
+
+    def regrouped(self, nnz_tile: int) -> "GroupedCOO":
+        """This GroupedCOO re-padded to a different tile size, memoized
+        per target tile (the same per-``(format, tile)`` conversion cache
+        ``CSR`` has) — a serving loop whose tuned ``nnz_tile`` differs
+        from the feed's converts once, not per call."""
+        if nnz_tile == self.nnz_tile:
+            return self
+
+        def build():
+            nnz = self.nnz
+            padded = max(round_up(max(nnz, 1), nnz_tile), nnz_tile)
+            pad = padded - nnz
+            return GroupedCOO(
+                rows=jnp.concatenate(
+                    [self.rows[:nnz],
+                     jnp.full((pad,), self.shape[0] - 1, jnp.int32)]),
+                cols=jnp.concatenate(
+                    [self.cols[:nnz], jnp.zeros((pad,), jnp.int32)]),
+                vals=jnp.concatenate(
+                    [self.vals[:nnz],
+                     jnp.zeros((pad,), self.vals.dtype)]),
+                shape=self.shape, nnz=nnz, nnz_tile=nnz_tile)
+
+        return _memoized(self, (self.rows, self.cols, self.vals),
+                         ("regrouped", nnz_tile), build)
 
     def todense(self) -> jax.Array:
         out = jnp.zeros(self.shape, self.vals.dtype)

@@ -1,67 +1,131 @@
 """The single public sparse API: schedule coercion + kernel dispatch.
 
-``spmm``, ``sddmm`` and ``segment_reduce`` all accept ``schedule=`` as a
-name ('EB+PR', ...), a :class:`~repro.core.schedule.Schedule`, an
+``spmm``, ``sddmm``, ``segment_reduce`` and ``sparse_attention`` all
+accept ``schedule=`` as a name ('EB+PR', ...), a
+:class:`~repro.core.schedule.Schedule`, an
 :class:`~repro.core.AtomicParallelism` point, or a
 :class:`~repro.core.SegmentGroup`.  ``spmm`` additionally accepts
 ``'auto'`` (the data-aware selector — the paper's Table-5 "dynamic
 choice" made a library default); the other ops have no matrix to derive
 statistics from, so ``'auto'`` raises there.
 
-``spmm`` over CSR is differentiable: the forward runs the scheduled
-Pallas kernel, the backward closes the paper's algebra family on itself
-(dvals = SDDMM(dOut, B), dB = Aᵀ·dOut — Sgap Eq. 2c/2d).  Feed-format
-conversions go through the per-(format, tile) cache on ``CSR``, so a
-training loop re-using the same matrix does not re-convert every step.
+Fusion surface (DESIGN.md §8):
+
+* ``spmm(..., bias=, residual=, epilogue=)`` fuses the dense epilogue of
+  a GCN-style layer (``act(A @ XW + b) [+ res]``) into the kernel's last
+  reduction grid step — one kernel instead of three HBM passes.  The
+  epilogue spec is auto-derived from the arrays you pass (or taken from
+  ``schedule.epilogue`` / an explicit ``epilogue=``).
+* ``segment_reduce(..., op="max"|"mean")`` runs the monoid-generalized
+  group machinery (graph pooling); ``mean`` is the add monoid with a
+  fused count column (one kernel pass + a divide).
+* ``sparse_attention`` is the one-pass SDDMM → segment softmax → SpMM
+  kernel with online renormalization (``kernels.fused_attention``).
+
+``spmm`` over CSR and ``sparse_attention`` are differentiable: forwards
+run the scheduled Pallas kernels, backwards close the paper's algebra
+family on itself (SDDMM / transpose-SpMM / segment ops — Sgap Eq. 2c/2d)
+through the pure-JAX oracles.  Feed-format conversions go through the
+per-(format, tile) caches on ``CSR``/``GroupedCOO``, so serving loops
+re-using the same matrix do not re-convert every call.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ..core.schedule import Schedule, as_schedule
+from ..core.schedule import Epilogue, Schedule, as_schedule
 from ..kernels import ops as kops
 from ..kernels import ref
+from ..kernels.fused_attention import (
+    fused_sparse_attention as _fused_attn_kernel,
+)
+from ..kernels.fused_attention import sparse_attention_ref
 from ..kernels.segment_reduce import segment_reduce as _segment_reduce_kernel
-from .formats import CSR, ELL, GroupedCOO
+from .formats import CSR, ELL, GroupedCOO, round_up
 from .random import matrix_stats
 
-__all__ = ["spmm", "sddmm", "segment_reduce"]
+__all__ = ["spmm", "sddmm", "segment_reduce", "sparse_attention"]
 
 
-def _resolve_schedule(a, b, schedule) -> Schedule:
+def _resolve_schedule(a, b, schedule, epilogue: Epilogue | None = None):
     if isinstance(schedule, str) and schedule in ("auto", "tune"):
         if not isinstance(a, CSR):
             # no CSR to derive statistics (or a fingerprint) from
-            return Schedule("eb")
-        if schedule == "tune":
+            sched = Schedule("eb")
+        elif schedule == "tune":
             from ..tune import tune_schedule
 
-            return tune_schedule(a, int(b.shape[1])).schedule
-        return Schedule.auto(matrix_stats(a), int(b.shape[1]))
-    return as_schedule(schedule)
+            return tune_schedule(a, int(b.shape[1]),
+                                 epilogue=epilogue).schedule
+        else:
+            sched = Schedule.auto(matrix_stats(a), int(b.shape[1]))
+    else:
+        sched = as_schedule(schedule)
+    if epilogue is not None:
+        sched = sched.replace(epilogue=epilogue)
+    return sched
 
 
-def spmm(a, b, schedule="auto", *, impl: str = "pallas",
+def _derive_epilogue(schedule, epilogue, bias, residual) -> Epilogue | None:
+    """Effective epilogue: an explicit ``epilogue=`` wins, else the
+    schedule's own; the bias/residual flags are auto-set from the arrays
+    actually passed (so ``spmm(..., bias=b)`` just works)."""
+    import dataclasses
+
+    ep = epilogue
+    if ep is None and isinstance(schedule, Schedule):
+        ep = schedule.epilogue
+    if ep is None:
+        ep = Epilogue()
+    if bias is not None and not ep.bias:
+        ep = dataclasses.replace(ep, bias=True)
+    if residual is not None and not ep.residual:
+        ep = dataclasses.replace(ep, residual=True)
+    return None if ep.is_noop else ep
+
+
+def spmm(a, b, schedule="auto", *, bias=None, residual=None,
+         epilogue: Epilogue | None = None, impl: str = "pallas",
          interpret: bool = True):
-    """out = A @ B for sparse A (CSR / GroupedCOO / ELL) and dense B.
+    """out = epilogue(A @ B) for sparse A (CSR / GroupedCOO / ELL) and
+    dense B.
 
     schedule    'auto' | 'tune' | name | Schedule | AtomicParallelism |
                 SegmentGroup.  'tune' measures the top schedule
                 candidates for this matrix (replaying the persistent
-                fingerprint cache when it can — see ``repro.tune``).
+                fingerprint cache when it can — see ``repro.tune``);
+                tuning is epilogue-aware (the fused work is measured).
+    bias        (N,) fused bias-row add over output columns.
+    residual    (n_rows, N) fused post-activation residual add.
+    epilogue    explicit :class:`~repro.core.Epilogue` (activation /
+                out_dtype); bias/residual flags are auto-derived from
+                the arrays above.
     impl        'pallas' (scheduled kernel) or 'ref' (pure-jnp oracle).
 
-    The CSR + pallas path is differentiable in ``a.vals`` and ``b``.
+    The CSR + pallas path is differentiable in ``a.vals``, ``b``,
+    ``bias`` and ``residual``.
     """
-    sched = _resolve_schedule(a, b, schedule)
+    ep = _derive_epilogue(schedule, epilogue, bias, residual)
+    sched = _resolve_schedule(a, b, schedule, epilogue=ep)
     if impl != "ref" and isinstance(a, CSR):
-        return _spmm_csr_diff(a, b, sched, interpret)
-    return kops.spmm(a, b, sched, impl=impl, interpret=interpret)
+        return _spmm_csr_diff(a, b, sched, interpret, bias, residual)
+    return kops.spmm(a, b, sched, bias=bias, residual=residual,
+                     impl=impl, interpret=interpret)
 
 
-def _spmm_csr_diff(a: CSR, b, sched: Schedule, interpret: bool):
-    """Custom-VJP wrapper: scheduled kernel forward, ref backward."""
+def _spmm_csr_diff(a: CSR, b, sched: Schedule, interpret: bool,
+                   bias=None, residual=None):
+    """Custom-VJP wrapper: scheduled (epilogued) kernel forward, ref
+    backward.  ``y = act(A@B + bias) + residual`` (then dtype cast), so
+
+        dz        = dy ⊙ act'(A@B + bias)      (VJP of the activation)
+        dvals     = SDDMM(dz, B)               (Eq. 2c)
+        dB        = Aᵀ · dz                    (Eq. 2d)
+        dbias     = Σ_rows dz
+        dresidual = dy
+    """
+    ep = sched.epilogue
     coo = a.tocoo()  # cached on the CSR instance
     rows, cols = coo.rows, coo.cols
     n_rows, n_cols = a.shape
@@ -70,40 +134,58 @@ def _spmm_csr_diff(a: CSR, b, sched: Schedule, interpret: bool):
         g0 = a.grouped(sched.nnz_tile)
         pad = g0.nnz_padded - g0.nnz
 
-        def run(vals, bb):
+        def run(vals, bb, bias_x, res_x):
             vpad = jnp.concatenate(
                 [vals, jnp.zeros((pad,), vals.dtype)]) if pad else vals
             g = GroupedCOO(rows=g0.rows, cols=g0.cols, vals=vpad,
                            shape=g0.shape, nnz=g0.nnz, nnz_tile=g0.nnz_tile)
-            return kops.spmm(g, bb, sched, interpret=interpret)
+            return kops.spmm(g, bb, sched, bias=bias_x, residual=res_x,
+                             interpret=interpret)
     else:
         ell0 = a.ell(row_tile=sched.row_tile)
         rid, pos = a.ell_scatter_index()
 
-        def run(vals, bb):
+        def run(vals, bb, bias_x, res_x):
             evals = jnp.zeros(ell0.vals.shape,
                               vals.dtype).at[rid, pos].set(vals)
             e = ELL(cols=ell0.cols, vals=evals, shape=ell0.shape,
                     width=ell0.width)
-            return kops.spmm(e, bb, sched, interpret=interpret)
+            return kops.spmm(e, bb, sched, bias=bias_x, residual=res_x,
+                             interpret=interpret)
 
     @jax.custom_vjp
-    def fn(vals, bb):
-        return run(vals, bb)
+    def fn(vals, bb, bias_x, res_x):
+        return run(vals, bb, bias_x, res_x)
 
-    def fwd(vals, bb):
-        return run(vals, bb), (vals, bb)
+    def fwd(vals, bb, bias_x, res_x):
+        return run(vals, bb, bias_x, res_x), (vals, bb, bias_x, res_x)
 
     def bwd(res, dout):
-        vals, bb = res
+        vals, bb, bias_x, res_x = res
+        dout = dout.astype(jnp.float32)
+        dres = dout.astype(res_x.dtype) if ep.residual else None
+        if ep.activation is not None:
+            # recompute the pre-activation z through the oracle, then
+            # pull dout back through the activation
+            z = ref.spmm_coo_ref(rows, cols, vals, bb, n_rows)
+            if ep.bias:
+                z = z + jnp.reshape(bias_x, (1, -1)).astype(jnp.float32)
+            from ..core.schedule import ACTIVATIONS
+
+            _, act_vjp = jax.vjp(ACTIVATIONS[ep.activation], z)
+            dz, = act_vjp(dout)
+        else:
+            dz = dout
+        dbias = jnp.sum(dz, axis=0).astype(
+            bias_x.dtype) if ep.bias else None
         # dA values: sampled dense-dense product at the sparsity pattern
-        dvals = ref.sddmm_ref(rows, cols, dout, bb).astype(vals.dtype)
+        dvals = ref.sddmm_ref(rows, cols, dz, bb).astype(vals.dtype)
         # dB: transpose SpMM (cols become the segment ids)
-        db = ref.spmm_coo_ref(cols, rows, vals, dout, n_cols).astype(bb.dtype)
-        return dvals, db
+        db = ref.spmm_coo_ref(cols, rows, vals, dz, n_cols).astype(bb.dtype)
+        return dvals, db, dbias, dres
 
     fn.defvjp(fwd, bwd)
-    return fn(a.vals, b)
+    return fn(a.vals, b, bias, residual)
 
 
 def sddmm(rows, cols, a, b, scale=None, *, schedule=None,
@@ -131,12 +213,18 @@ def sddmm(rows, cols, a, b, scale=None, *, schedule=None,
 
 
 def segment_reduce(seg_ids, data, num_segments: int, schedule=None, *,
-                   interpret: bool = True):
-    """out[s] = Σ_{t: seg_ids[t]=s} data[t] through the segment-group
-    kernel.  ``schedule`` carries (nnz_tile -> tile, group_size, strategy);
-    ``schedule="tune"`` measures (tile, G, strategy) for this segment
-    profile (cached by fingerprint); ragged inputs are zero-extended by
-    the kernel wrapper."""
+                   op: str = "sum", interpret: bool = True):
+    """out[s] = ⨁_{t: seg_ids[t]=s} data[t] through the segment-group
+    kernel, for ``op`` in 'sum' / 'max' / 'min' / 'mean'.
+
+    'max'/'min' run the monoid-generalized strategy machinery (graph
+    pooling — untouched segments come out as ±inf, matching
+    ``jax.ops.segment_max``).  'mean' is realized as the add monoid with
+    a count column fused into the same kernel pass (out = sums / counts;
+    empty segments -> 0).  ``schedule`` carries (nnz_tile -> tile,
+    group_size, strategy); ``schedule="tune"`` measures (tile, G,
+    strategy) for this segment profile (cached by fingerprint); ragged
+    inputs are identity-extended by the kernel wrapper."""
     if isinstance(schedule, str) and schedule == "tune":
         from ..tune import tune_segment_reduce
 
@@ -144,7 +232,119 @@ def segment_reduce(seg_ids, data, num_segments: int, schedule=None, *,
             seg_ids, int(data.shape[1]), num_segments).schedule
     else:
         sched = as_schedule(schedule)
+    if op == "mean":
+        # one kernel pass: ride a ones column along the data, divide
+        aug = jnp.concatenate(
+            [data.astype(jnp.float32),
+             jnp.ones((data.shape[0], 1), jnp.float32)], axis=1)
+        out = _segment_reduce_kernel(
+            seg_ids, aug, num_segments=num_segments, tile=sched.nnz_tile,
+            group_size=sched.group_size, strategy=sched.strategy,
+            interpret=interpret)
+        return out[:, :-1] / jnp.maximum(out[:, -1:], 1.0)
     return _segment_reduce_kernel(
         seg_ids, data, num_segments=num_segments, tile=sched.nnz_tile,
         group_size=sched.group_size, strategy=sched.strategy,
-        interpret=interpret)
+        op="add" if op == "sum" else op, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused sparse attention
+# ---------------------------------------------------------------------------
+
+
+def _attn_pattern(adj):
+    """(rows, cols, n_rows) from a CSR adjacency (pattern only; values
+    are ignored) or an explicit ``(rows, cols, n_rows)`` tuple."""
+    if isinstance(adj, CSR):
+        coo = adj.tocoo()
+        return coo.rows, coo.cols, adj.shape[0]
+    rows, cols, n_rows = adj
+    return rows, cols, int(n_rows)
+
+
+def sparse_attention(adj, q, k, v, *, schedule=None,
+                     scale: float | None = None, impl: str = "pallas",
+                     interpret: bool = True):
+    """One-pass sparse attention over a sparsity pattern:
+    ``out[r] = Σ_t softmax_row(<Q[r], K[c_t]> · scale) V[c_t]``.
+
+    adj       a CSR adjacency (its pattern is attended over; values are
+              ignored) or a ``(rows, cols, n_rows)`` tuple with rows
+              sorted non-decreasing (CSR order).
+    q         (n_rows, d) queries;  k: (n_cols, d) keys;
+    v         (n_cols, dv) values.
+    schedule  supplies (nnz_tile, group_size, strategy) for the fused
+              kernel's grid; 'parallel' is excluded (its one-writeback
+              contract does not hold for attention rows).
+    impl      'pallas' (the fused kernel — SDDMM → online segment
+              softmax → SpMM in one pass) or 'ref' (the spec oracle).
+
+    Differentiable in q, k, v (custom VJP through the spec's algebra:
+    softmax backward + SDDMM/transpose-SpMM).  Empty rows -> zero rows.
+    """
+    rows, cols, n_rows = _attn_pattern(adj)
+    if scale is None:
+        scale = float(q.shape[-1]) ** -0.5
+    if impl == "ref":
+        return sparse_attention_ref(rows, cols, q, k, v, n_rows=n_rows,
+                                    scale=scale)
+    sched = as_schedule(schedule)
+    if sched.strategy == "parallel":
+        raise ValueError(
+            "sparse_attention cannot run the 'parallel' strategy: its "
+            "single-writeback contract does not hold for attention rows")
+    return _sparse_attention_diff(rows, cols, q, k, v, n_rows, scale,
+                                  sched, interpret)
+
+
+def _sparse_attention_diff(rows, cols, q, k, v, n_rows, scale, sched,
+                           interpret):
+    nnz = int(rows.shape[0])
+    nnz_tile = sched.nnz_tile
+    nnz_pad = max(round_up(max(nnz, 1), nnz_tile), nnz_tile)
+    rows_p = jnp.pad(rows, (0, nnz_pad - nnz))
+    cols_p = jnp.pad(cols, (0, nnz_pad - nnz))
+    dv = v.shape[1]
+    dv_tile = min(128, round_up(dv, 8))
+    dv_pad = round_up(dv, dv_tile)
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        v_p = (jnp.pad(v, ((0, 0), (0, dv_pad - dv)))
+               if dv_pad != dv else v)
+        out, _m, _l = _fused_attn_kernel(
+            rows_p, cols_p, q, k, v_p, n_rows=n_rows, nnz=nnz,
+            nnz_tile=nnz_tile, dv_tile=dv_tile, scale=scale,
+            group_size=sched.group_size, strategy=sched.strategy,
+            interpret=interpret)
+        return out[:, :dv]
+
+    def fwd(q, k, v):
+        return fn(q, k, v), (q, k, v)
+
+    def bwd(res, dout):
+        from ..kernels.fused_attention import sparse_softmax_weights
+
+        q, k, v = res
+        qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+        do = dout.astype(jnp.float32)
+        # recompute the softmax weights through the shared spec helper
+        w = sparse_softmax_weights(rows, cols, q, k, n_rows=n_rows,
+                                   scale=scale)  # (nnz,)
+        # value gradient: transpose-SpMM of the weighted cotangent
+        dv_ = jax.ops.segment_sum(w[:, None] * do[rows], cols,
+                                  num_segments=v.shape[0])
+        # softmax backward per row: ds = w (dw - Σ_row w dw)
+        dw = jnp.sum(do[rows] * vf[cols], axis=-1)  # SDDMM(dout, V)
+        delta = jax.ops.segment_sum(w * dw, rows, num_segments=n_rows)
+        ds = w * (dw - delta[rows]) * scale
+        dq = jax.ops.segment_sum(ds[:, None] * kf[cols], rows,
+                                 num_segments=n_rows)
+        dk = jax.ops.segment_sum(ds[:, None] * qf[rows], cols,
+                                 num_segments=k.shape[0])
+        return (dq.astype(q.dtype), dk.astype(k.dtype),
+                dv_.astype(v.dtype))
+
+    fn.defvjp(fwd, bwd)
+    return fn(q, k, v)

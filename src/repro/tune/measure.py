@@ -47,19 +47,21 @@ def bench_warmup(default: int = 2) -> int:
 
 
 def time_fn(fn, *args, warmup: int | None = None,
-            iters: int | None = None) -> float:
+            iters: int | None = None, cap_env: bool = True) -> float:
     """Median seconds/call of a jitted fn (blocks on results).
 
     ``REPRO_BENCH_ITERS`` / ``REPRO_BENCH_WARMUP`` supply defaults and
     *cap* explicit arguments, so CI smoke bounds total bench time without
-    touching call sites."""
+    touching call sites.  ``cap_env=False`` exempts a measurement from
+    the caps — for fixed-workload yardsticks that must be comparable
+    across runs (the ``probe/runner_speed`` row)."""
     if warmup is None:
         warmup = bench_warmup()
-    elif "REPRO_BENCH_WARMUP" in os.environ:
+    elif cap_env and "REPRO_BENCH_WARMUP" in os.environ:
         warmup = min(warmup, bench_warmup())
     if iters is None:
         iters = bench_iters()
-    elif "REPRO_BENCH_ITERS" in os.environ:
+    elif cap_env and "REPRO_BENCH_ITERS" in os.environ:
         iters = max(1, min(iters, bench_iters()))
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
@@ -81,19 +83,42 @@ def _dense_b(csr, n_dense):
     return jax.random.normal(jax.random.PRNGKey(0), (csr.shape[1], n_dense))
 
 
+def _epilogue_args(epilogue, n_rows, n_dense):
+    """Synthesized epilogue operands for measurement (the tuner measures
+    the fused work a real workload would run — DESIGN.md §8)."""
+    if epilogue is None or epilogue.is_noop:
+        return None, None
+    key = jax.random.PRNGKey(1)
+    bias = (jax.random.normal(key, (n_dense,))
+            if epilogue.bias else None)
+    res = (jax.random.normal(key, (n_rows, n_dense))
+           if epilogue.residual else None)
+    return bias, res
+
+
+def _apply_epilogue(out, epilogue, bias, res):
+    if epilogue is None or epilogue.is_noop:
+        return out
+    return epilogue.apply(out, bias=bias, residual=res)
+
+
 def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
-                   nnz_tile: int = 256):
+                   nnz_tile: int = 256, epilogue=None):
     g = csr.grouped(max(nnz_tile, group_size))
     n_rows = csr.shape[0]
+    bias, res = _epilogue_args(epilogue, n_rows, n_dense)
 
     def run(rows, cols, vals, b):
         partial = vals[:, None].astype(jnp.float32) * jnp.take(
             b.astype(jnp.float32), cols, axis=0)
         if strategy == GroupReduceStrategy.ACCUMULATE.value:
-            return jax.ops.segment_sum(partial, rows, num_segments=n_rows)
-        # any registered strategy name dispatches through the registry
-        return segment_group_reduce(partial, rows, n_rows,
-                                    group_size=group_size, strategy=strategy)
+            out = jax.ops.segment_sum(partial, rows, num_segments=n_rows)
+        else:
+            # any registered strategy name dispatches through the registry
+            out = segment_group_reduce(partial, rows, n_rows,
+                                       group_size=group_size,
+                                       strategy=strategy)
+        return _apply_epilogue(out, epilogue, bias, res)
 
     fn = jax.jit(run)
     args = (g.rows, g.cols, g.vals, _dense_b(csr, n_dense))
@@ -101,12 +126,14 @@ def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
 
 
 def make_rb_runner(csr, n_dense, *, row_tile: int = 8,
-                   width: int | None = None):
+                   width: int | None = None, epilogue=None):
     ell = csr.ell(row_tile=row_tile, width=width)
     n_rows = csr.shape[0]
+    bias, res = _epilogue_args(epilogue, n_rows, n_dense)
 
     def run(ecols, evals, b):
-        return ref.spmm_ell_ref(ecols, evals, b, n_rows)
+        return _apply_epilogue(ref.spmm_ell_ref(ecols, evals, b, n_rows),
+                               epilogue, bias, res)
 
     fn = jax.jit(run)
     args = (ell.cols, ell.vals, _dense_b(csr, n_dense))
@@ -114,12 +141,15 @@ def make_rb_runner(csr, n_dense, *, row_tile: int = 8,
 
 
 def make_runner(csr, n_dense: int, sched: Schedule):
-    """Runner for an arbitrary :class:`Schedule` (dispatch on kernel)."""
+    """Runner for an arbitrary :class:`Schedule` (dispatch on kernel);
+    the schedule's epilogue is part of the measured program."""
     if sched.kernel == "eb":
         return make_eb_runner(csr, n_dense, group_size=sched.group_size,
                               strategy=sched.strategy,
-                              nnz_tile=sched.nnz_tile)
-    return make_rb_runner(csr, n_dense, row_tile=sched.row_tile)
+                              nnz_tile=sched.nnz_tile,
+                              epilogue=sched.epilogue)
+    return make_rb_runner(csr, n_dense, row_tile=sched.row_tile,
+                          epilogue=sched.epilogue)
 
 
 def measure_schedule(csr, n_dense: int, sched: Schedule, *,

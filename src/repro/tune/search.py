@@ -44,7 +44,9 @@ __all__ = [
 def schedule_key(s: Schedule) -> str:
     """Stable string identity of a schedule point (JSON-safe dict key)."""
     tile = s.nnz_tile if s.kernel == "eb" else s.row_tile
-    return f"{s.kernel}:t{tile}:c{s.col_tile}:G{s.group_size}:{s.strategy}"
+    ep = "" if s.epilogue.is_noop else f":ep[{s.epilogue.tag}]"
+    return (f"{s.kernel}:t{tile}:c{s.col_tile}:G{s.group_size}"
+            f":{s.strategy}{ep}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +171,7 @@ def tune_schedule(
     warmup: Optional[int] = None,
     iters: Optional[int] = None,
     backend: Optional[str] = None,
+    epilogue=None,
 ) -> TuneResult:
     """Empirically pick the best schedule for ``csr @ B`` (B with
     ``n_dense_cols`` columns); see the module docstring for the phases.
@@ -182,10 +185,19 @@ def tune_schedule(
     measure     override objective ``schedule -> seconds`` (tests,
                 calibration replays); default wall-clocks the jitted
                 schedule analogue via ``tune.measure``.
+    epilogue    fused :class:`~repro.core.Epilogue` the workload will run
+                — attached to every measured candidate so the fused work
+                is *part of the objective*, and folded into the cache key
+                (an epilogued workload never replays a plain record or
+                vice versa).  The returned/tuned schedule carries it.
     """
     if cache is None:
         cache = default_cache(backend)
+    if epilogue is not None and epilogue.is_noop:
+        epilogue = None
     key = cache_key(csr, n_dense_cols)
+    if epilogue is not None:
+        key = f"{key}|ep:{epilogue.tag}"
     hit = _replay(cache, key)
     if hit is not None:
         return hit
@@ -196,9 +208,13 @@ def tune_schedule(
             return measure_schedule(csr, n_dense_cols, s,
                                     warmup=warmup, iters=iters)
 
+    def with_ep(s: Schedule) -> Schedule:
+        return s if epilogue is None else s.replace(epilogue=epilogue)
+
     ranked = sorted(_feasible(candidate_schedules(n_dense_cols), stats),
                     key=lambda s: predict_cost(stats, s, n_dense_cols))
-    pool: List[Schedule] = [select_schedule(stats, n_dense_cols)]
+    ranked = [with_ep(s) for s in ranked]
+    pool: List[Schedule] = [with_ep(select_schedule(stats, n_dense_cols))]
     for s in ranked:
         if len(pool) > top_k:
             break

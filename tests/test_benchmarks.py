@@ -163,3 +163,118 @@ def test_diff_compare_is_importable_for_local_use(tmp_path):
     findings = bench_diff.compare(old, new, threshold=0.10)
     kinds = {(k, reg) for k, _, _, _, _, reg in findings}
     assert ("us", True) in kinds
+
+
+# ---------------------------------------------------------------------------
+# runner-speed probe normalization + trajectory window (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+
+def test_diff_probe_normalizes_runner_speed(tmp_path):
+    """A 2x slower runner doubles raw us across the board — with the
+    probe row present on both sides the normalized gate stays green,
+    while a real 2x regression (probe unchanged) still fails."""
+    old = _write(tmp_path, "old.json", _bench([
+        (bench_diff.PROBE_ROW, 50.0, ""),
+        ("table5/a", 100.0, ""), ("table5/b", 200.0, "")]))
+    slow_runner = _write(tmp_path, "slow.json", _bench([
+        (bench_diff.PROBE_ROW, 100.0, ""),
+        ("table5/a", 200.0, ""), ("table5/b", 400.0, "")]))
+    assert bench_diff.main([old, slow_runner, "--threshold", "0.10"]) == 0
+    real_regression = _write(tmp_path, "reg.json", _bench([
+        (bench_diff.PROBE_ROW, 50.0, ""),
+        ("table5/a", 200.0, ""), ("table5/b", 400.0, "")]))
+    assert bench_diff.main([old, real_regression,
+                            "--threshold", "0.10"]) == 1
+
+
+def test_diff_without_probe_still_gates_raw(tmp_path):
+    """Artifacts predating the probe keep the raw-us behavior."""
+    old = _write(tmp_path, "old.json", _bench([("table5/a", 100.0, "")]))
+    new = _write(tmp_path, "new.json", _bench([("table5/a", 130.0, "")]))
+    assert bench_diff.main([old, new, "--threshold", "0.10"]) == 1
+
+
+def _traj(tmp_path, name, runs, window=5):
+    p = tmp_path / name
+    bench_diff.save_trajectory(str(p), runs, window)
+    return str(p)
+
+
+def test_diff_trajectory_catches_slow_drift(tmp_path, capsys):
+    """+6%/run passes every pairwise diff but accumulates past the
+    threshold against the window median."""
+    runs = [_bench([("table5/a", 100.0 * 1.06 ** i, "")])
+            for i in range(4)]
+    traj = _traj(tmp_path, "traj.json", runs)
+    new = _write(tmp_path, "new.json",
+                 _bench([("table5/a", 100.0 * 1.06 ** 4, "")]))
+    # pairwise vs the last run alone would pass...
+    prev = _write(tmp_path, "prev.json", runs[-1])
+    assert bench_diff.main([prev, new, "--threshold", "0.10"]) == 0
+    # ...the window median catches the drift
+    assert bench_diff.main(["--trajectory", traj, new,
+                            "--threshold", "0.10"]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and "run median" in out
+
+
+def test_diff_trajectory_skips_preprobe_runs_in_median(tmp_path):
+    """A legacy (probe-less) run in the window must not mix its raw us
+    into the normalized median baseline — it is skipped, and the gate
+    still catches a real regression against the probed runs."""
+    legacy = _bench([("table5/a", 100.0, "")])  # raw us, no probe
+    probed = _bench([(bench_diff.PROBE_ROW, 50.0, ""),
+                     ("table5/a", 100.0, "")])  # normalized value: 2.0
+    traj = _traj(tmp_path, "traj.json", [legacy, probed, probed])
+    bad = _write(tmp_path, "bad.json", _bench([
+        (bench_diff.PROBE_ROW, 50.0, ""),
+        ("table5/a", 130.0, "")]))  # 1.3x regression, same probe
+    assert bench_diff.main(["--trajectory", traj, bad,
+                            "--threshold", "0.10"]) == 1
+    ok = _write(tmp_path, "ok.json", _bench([
+        (bench_diff.PROBE_ROW, 50.0, ""),
+        ("table5/a", 103.0, "")]))
+    assert bench_diff.main(["--trajectory", traj, ok,
+                            "--threshold", "0.10"]) == 0
+
+
+def test_diff_trajectory_update_appends_and_trims(tmp_path):
+    runs = [_bench([("table5/a", 100.0, "")]) for _ in range(5)]
+    traj = _traj(tmp_path, "traj.json", runs)
+    new = _write(tmp_path, "new.json", _bench([("table5/a", 101.0, "")]))
+    assert bench_diff.main(["--trajectory", traj, new, "--window", "5",
+                            "--update"]) == 0
+    kept = bench_diff.load_trajectory(traj)
+    assert len(kept) == 5  # trimmed to the window
+    assert kept[-1]["table5/a"]["us_per_call"] == 101.0
+
+
+def test_diff_empty_trajectory_seeds_green(tmp_path):
+    new = _write(tmp_path, "new.json", _bench([("table5/a", 100.0, "")]))
+    traj = str(tmp_path / "fresh.json")
+    assert bench_diff.main(["--trajectory", traj, new, "--update"]) == 0
+    assert len(bench_diff.load_trajectory(traj)) == 1
+
+
+def test_diff_trajectory_accepts_bare_artifact_seed(tmp_path):
+    """A pre-trajectory BENCH_ci.json seeds a 1-run window (the CI
+    migration path)."""
+    seed = _write(tmp_path, "seed.json", _bench([("table5/a", 100.0, "")]))
+    new = _write(tmp_path, "new.json", _bench([("table5/a", 103.0, "")]))
+    assert bench_diff.main(["--trajectory", seed, new]) == 0
+
+
+def test_fused_attention_win_ratio_reports_without_gating(tmp_path,
+                                                          capsys):
+    """The fused-vs-unfused geomean is tracked as info: its magnitude
+    swings with runner load (sequential multi-second timings), so a
+    drop reports but does not fail the diff."""
+    old = _write(tmp_path, "old.json", _bench([
+        ("beyond/fused_attention_gap", 0.0,
+         "fused_vs_unfused_geomean=2.500")]))
+    new = _write(tmp_path, "new.json", _bench([
+        ("beyond/fused_attention_gap", 0.0,
+         "fused_vs_unfused_geomean=1.800")]))
+    assert bench_diff.main([old, new]) == 0
+    assert "fused_vs_unfused_geomean" in capsys.readouterr().out

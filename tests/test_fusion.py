@@ -1,0 +1,486 @@
+"""Fused-vs-unfused parity tests (ISSUE 4): kernel epilogues, the
+monoid-generalized reduction registry, and the one-pass fused sparse
+attention — forward AND gradients against the pure-JAX spec oracles,
+property-tested over random patterns including empty-row /
+single-nnz-row edge cases and the strategy matrix.
+
+Property tests run under hypothesis when it is installed (CI does);
+without it they degrade to a fixed seed sweep covering the same edge
+cases instead of skipping, so the parity contract is always enforced.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in the lean container
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (  # noqa: E402
+    Epilogue,
+    Schedule,
+    get_strategy,
+    register_strategy,
+    segment_group_reduce,
+)
+from repro.kernels import ref  # noqa: E402
+from repro.kernels.fused_attention import sparse_attention_ref  # noqa: E402
+from repro.sparse import (  # noqa: E402
+    random_csr,
+    sddmm,
+    segment_reduce,
+    sparse_attention,
+    spmm,
+)
+
+RTOL = ATOL = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# problem generators: hypothesis strategies + fixed fallback sweeps
+# ---------------------------------------------------------------------------
+
+
+def _property(strategy_fn, examples, max_examples=10):
+    """``@given`` under hypothesis, a fixed parametrize sweep without."""
+    if HAVE_HYPOTHESIS:
+        def deco(f):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(prob=strategy_fn())(f))
+
+        return deco
+    return pytest.mark.parametrize("prob", examples)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def csr_problem(draw):
+        """Small CSR (with empty rows / single-nnz rows) + dense width."""
+        m = draw(st.integers(6, 60))
+        n = draw(st.integers(6, 60))
+        density = draw(st.sampled_from([0.005, 0.05, 0.15]))
+        skew = draw(st.sampled_from([0.0, 1.5]))
+        c = draw(st.integers(1, 10))
+        seed = draw(st.integers(0, 2 ** 16))
+        return m, n, density, skew, c, seed
+
+    @st.composite
+    def attn_problem(draw):
+        n_rows = draw(st.integers(4, 40))
+        n_cols = draw(st.integers(4, 40))
+        # nnz up to 3*n_rows: sparse enough to leave rows empty, and
+        # rows with exactly one nnz appear routinely
+        nnz = draw(st.integers(1, 3 * n_rows))
+        d = draw(st.sampled_from([4, 8]))
+        dv = draw(st.sampled_from([4, 16]))
+        seed = draw(st.integers(0, 2 ** 16))
+        return n_rows, n_cols, nnz, d, dv, seed
+else:
+    csr_problem = attn_problem = None
+
+# fixed sweeps mirroring the strategies (many empty rows at 0.005;
+# skewed long rows at 1.5; ragged non-multiple sizes)
+CSR_EXAMPLES = [
+    (6, 6, 0.05, 0.0, 1, 0),
+    (33, 47, 0.005, 0.0, 3, 1),     # mostly empty rows, nnz < one tile
+    (60, 24, 0.15, 1.5, 10, 2),     # skewed: a few very long rows
+    (24, 60, 0.05, 1.5, 7, 3),
+]
+ATTN_EXAMPLES = [
+    (4, 4, 1, 4, 4, 0),             # single nnz in the whole pattern
+    (40, 24, 25, 8, 16, 1),         # most rows empty
+    (24, 40, 72, 8, 4, 2),          # dense-ish rows
+    (17, 9, 51, 4, 16, 3),          # ragged sizes
+]
+
+
+def _attn_pattern(n_rows, n_cols, nnz, seed):
+    rng = np.random.default_rng(seed)
+    rows = np.sort(rng.integers(0, n_rows, nnz)).astype(np.int32)
+    cols = rng.integers(0, n_cols, nnz).astype(np.int32)
+    return jnp.asarray(rows), jnp.asarray(cols)
+
+
+# ---------------------------------------------------------------------------
+# Epilogued SpMM: fused kernel == unfused spec, forward + grads
+# ---------------------------------------------------------------------------
+
+EPILOGUED_SCHEDS = [
+    Schedule("eb", nnz_tile=64, col_tile=8, group_size=8,
+             strategy="segment"),
+    Schedule("eb", nnz_tile=64, col_tile=8, group_size=16,
+             strategy="accumulate"),
+    Schedule("rb", row_tile=8, col_tile=8, strategy="parallel"),
+]
+
+
+@pytest.mark.parametrize("sched", EPILOGUED_SCHEDS,
+                         ids=lambda s: f"{s.kernel}-{s.strategy}")
+@_property(csr_problem, CSR_EXAMPLES)
+def test_epilogued_spmm_matches_unfused(sched, prob):
+    m, n, density, skew, c, seed = prob
+    csr = random_csr(m, n, density=density, skew=skew, seed=seed)
+    key = jax.random.PRNGKey(seed)
+    kb, kbias, kres = jax.random.split(key, 3)
+    b = jax.random.normal(kb, (n, c))
+    bias = jax.random.normal(kbias, (c,))
+    res = jax.random.normal(kres, (m, c))
+    ep = Epilogue(activation="relu", bias=True, residual=True)
+    got = np.asarray(spmm(csr, b, schedule=sched.replace(epilogue=ep),
+                          bias=bias, residual=res))
+    # unfused spec: oracle spmm, then the epilogue's executable spec
+    z = spmm(csr, b, impl="ref")
+    want = np.asarray(ep.apply(z, bias=bias, residual=res))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("sched", EPILOGUED_SCHEDS,
+                         ids=lambda s: f"{s.kernel}-{s.strategy}")
+def test_epilogued_spmm_grads_match_unfused(sched):
+    csr = random_csr(30, 24, density=0.1, skew=1.0, seed=7)
+    coo = csr.tocoo()
+    key = jax.random.PRNGKey(0)
+    kb, kbias, kres = jax.random.split(key, 3)
+    b = jax.random.normal(kb, (24, 5))
+    bias = jax.random.normal(kbias, (5,))
+    res = jax.random.normal(kres, (30, 5))
+    ep = Epilogue(activation="tanh", bias=True, residual=True)
+
+    def loss_fused(args):
+        bb, bi, rr = args
+        return jnp.sum(spmm(csr, bb, schedule=sched.replace(epilogue=ep),
+                            bias=bi, residual=rr) ** 2)
+
+    def loss_spec(args):
+        bb, bi, rr = args
+        z = ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, bb, 30)
+        return jnp.sum((jnp.tanh(z + bi[None, :]) + rr) ** 2)
+
+    g_f = jax.grad(loss_fused)((b, bias, res))
+    g_s = jax.grad(loss_spec)((b, bias, res))
+    for gf, gs in zip(g_f, g_s):
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(gs),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_epilogue_out_dtype_cast_in_kernel():
+    """out_dtype narrowing accumulates in the f32 scratch and casts only
+    on the final store: long rows (many reduction steps) must stay
+    within a single bf16 rounding of the f32 oracle."""
+    csr = random_csr(40, 200, density=0.4, seed=3)  # long rows
+    b = jax.random.normal(jax.random.PRNGKey(1), (200, 8))
+    want = np.asarray(spmm(csr, b, impl="ref"))
+    for sched in (Schedule("eb", nnz_tile=64, col_tile=8, group_size=8),
+                  Schedule("rb", row_tile=8, col_tile=8,
+                           strategy="parallel")):
+        got = spmm(csr, b, schedule=sched.replace(
+            epilogue=Epilogue(out_dtype="bfloat16")))
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   rtol=1.2e-2, atol=1.2e-2)
+
+
+def test_epilogue_requires_declared_arrays():
+    csr = random_csr(20, 20, density=0.1, seed=0)
+    b = jax.random.normal(jax.random.PRNGKey(0), (20, 4))
+    sched = Schedule("eb", nnz_tile=64, col_tile=8, group_size=8,
+                     epilogue=Epilogue(bias=True))
+    with pytest.raises(ValueError, match="bias"):
+        spmm(csr, b, schedule=sched)
+    with pytest.raises(ValueError):
+        Epilogue(activation="not-an-activation")
+
+
+def test_gcn_layer_is_single_fused_call():
+    from repro.models.layers import gcn_layer
+
+    csr = random_csr(32, 32, density=0.1, seed=5)
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 6)) * 0.3
+    b = jax.random.normal(jax.random.PRNGKey(2), (6,))
+    got = np.asarray(gcn_layer(csr, x, w, b, schedule=Schedule(
+        "eb", nnz_tile=64, col_tile=8, group_size=8)))
+    want = np.asarray(jax.nn.relu(spmm(csr, x @ w, impl="ref")
+                                  + b[None, :]))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Monoid-generalized reductions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["segment", "accumulate"])
+@pytest.mark.parametrize("op,oracle", [
+    ("max", jax.ops.segment_max),
+    ("min", jax.ops.segment_min),
+])
+def test_segment_reduce_monoids_through_kernel(strategy, op, oracle):
+    rng = np.random.default_rng(11)
+    seg = np.sort(rng.integers(0, 25, 300)).astype(np.int32)
+    data = rng.standard_normal((300, 7)).astype(np.float32)
+    sched = Schedule("eb", nnz_tile=64, group_size=8, strategy=strategy)
+    got = np.asarray(segment_reduce(jnp.asarray(seg), jnp.asarray(data),
+                                    25, schedule=sched, op=op))
+    want = np.asarray(oracle(jnp.asarray(data), jnp.asarray(seg),
+                             num_segments=25))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@_property(
+    (lambda: st.tuples(st.integers(0, 2 ** 16),
+                       st.sampled_from([2, 4, 8, 16])))
+    if HAVE_HYPOTHESIS else None,
+    [(0, 2), (1, 4), (2, 8), (3, 16), (4, 8)],
+    max_examples=20)
+def test_segment_group_reduce_spec_max_matches_segment_max(prob):
+    seed, g = prob
+    rng = np.random.default_rng(seed)
+    t = g * rng.integers(1, 8)
+    s = int(rng.integers(1, 15))
+    seg = np.sort(rng.integers(0, s, t)).astype(np.int32)
+    data = rng.standard_normal((t, 3)).astype(np.float32)
+    got = np.asarray(segment_group_reduce(
+        jnp.asarray(data), jnp.asarray(seg), s, group_size=g,
+        strategy="segment", op="max"))
+    want = np.asarray(jax.ops.segment_max(jnp.asarray(data),
+                                          jnp.asarray(seg),
+                                          num_segments=s))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_segment_reduce_mean_and_empty_segments():
+    seg = jnp.asarray([0, 0, 3], jnp.int32)  # segments 1, 2 empty
+    data = jnp.asarray([[2.0], [4.0], [5.0]])
+    got = np.asarray(segment_reduce(seg, data, 4, op="mean",
+                                    schedule=Schedule("eb", nnz_tile=64,
+                                                      group_size=8)))
+    np.testing.assert_allclose(got[:, 0], [3.0, 0.0, 0.0, 5.0],
+                               rtol=RTOL, atol=ATOL)
+    # max over an empty segment is the identity (-inf), like segment_max
+    got_max = np.asarray(segment_reduce(seg, data, 4, op="max"))
+    assert got_max[1, 0] == -np.inf and got_max[2, 0] == -np.inf
+    np.testing.assert_allclose(got_max[[0, 3], 0], [4.0, 5.0],
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_register_strategy_with_custom_combine():
+    from repro.core import available_strategies
+
+    # a user monoid: combine=maximum registered as the strategy's own
+    name = "test-max-combine"
+    if name not in available_strategies():
+        register_strategy(
+            name,
+            lambda p, s, n, g, monoid=None: jax.ops.segment_max(
+                p, s, num_segments=n),
+            combine=jnp.maximum, identity=-jnp.inf)
+    entry = get_strategy(name)
+    assert entry.monoid.identity == -jnp.inf
+    # a conflicting op= must refuse; the default add op defers to the
+    # strategy's own combine
+    with pytest.raises(ValueError, match="combine"):
+        get_strategy(name, op="min")
+    assert get_strategy(name, op="add").monoid is entry.monoid
+    # spec-only strategy falls back in-kernel and still reduces max
+    # (its own monoid supplies the -inf init/padding identity)
+    rng = np.random.default_rng(2)
+    seg = np.sort(rng.integers(0, 10, 64)).astype(np.int32)
+    data = rng.standard_normal((64, 3)).astype(np.float32)
+    got = np.asarray(segment_reduce(
+        jnp.asarray(seg), jnp.asarray(data), 10,
+        schedule=Schedule("eb", nnz_tile=64, group_size=8,
+                          strategy=name)))
+    want = np.asarray(jax.ops.segment_max(jnp.asarray(data),
+                                          jnp.asarray(seg),
+                                          num_segments=10))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Fused sparse attention
+# ---------------------------------------------------------------------------
+
+ATTN_SCHEDS = [
+    Schedule("eb", nnz_tile=64, group_size=8, strategy="segment"),
+    Schedule("eb", nnz_tile=64, group_size=32, strategy="accumulate"),
+]
+
+
+@pytest.mark.parametrize("sched", ATTN_SCHEDS,
+                         ids=lambda s: s.strategy)
+@_property(attn_problem, ATTN_EXAMPLES, max_examples=12)
+def test_sparse_attention_matches_oracle(sched, prob):
+    n_rows, n_cols, nnz, d, dv, seed = prob
+    rows, cols = _attn_pattern(n_rows, n_cols, nnz, seed)
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (n_rows, d))
+    k = jax.random.normal(kk, (n_cols, d))
+    v = jax.random.normal(kv, (n_cols, dv))
+    got = np.asarray(sparse_attention((rows, cols, n_rows), q, k, v,
+                                      schedule=sched))
+    want = np.asarray(sparse_attention_ref(rows, cols, q, k, v,
+                                           n_rows=n_rows))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("sched", ATTN_SCHEDS, ids=lambda s: s.strategy)
+def test_sparse_attention_grads_match_oracle(sched):
+    rows, cols = _attn_pattern(24, 20, 60, seed=9)
+    key = jax.random.PRNGKey(4)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (24, 8))
+    k = jax.random.normal(kk, (20, 8))
+    v = jax.random.normal(kv, (20, 6))
+    tgt = jax.random.normal(jax.random.PRNGKey(5), (24, 6))
+
+    def loss_fused(qkv):
+        out = sparse_attention((rows, cols, 24), *qkv, schedule=sched)
+        return jnp.sum((out - tgt) ** 2)
+
+    def loss_spec(qkv):
+        out = sparse_attention_ref(rows, cols, *qkv, n_rows=24)
+        return jnp.sum((out - tgt) ** 2)
+
+    g_f = jax.grad(loss_fused)((q, k, v))
+    g_s = jax.grad(loss_spec)((q, k, v))
+    for gf, gs in zip(g_f, g_s):
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(gs),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_attention_empty_and_single_nnz_rows():
+    rows = jnp.asarray([1, 3, 3], jnp.int32)
+    cols = jnp.asarray([0, 1, 2], jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(0), (5, 4))
+    k = jax.random.normal(jax.random.PRNGKey(1), (6, 4))
+    v = jax.random.normal(jax.random.PRNGKey(2), (6, 4))
+    got = np.asarray(sparse_attention((rows, cols, 5), q, k, v))
+    want = np.asarray(sparse_attention_ref(rows, cols, q, k, v, n_rows=5))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    # empty rows are exact zeros; a single-nnz row is exactly V[col]
+    assert np.all(got[0] == 0) and np.all(got[2] == 0) and np.all(got[4] == 0)
+    np.testing.assert_allclose(got[1], np.asarray(v[0], np.float32),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_sparse_attention_accepts_csr_and_rejects_parallel():
+    adj = random_csr(16, 16, density=0.2, seed=1)
+    q = jax.random.normal(jax.random.PRNGKey(0), (16, 4))
+    k = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    v = jax.random.normal(jax.random.PRNGKey(2), (16, 4))
+    got = np.asarray(sparse_attention(adj, q, k, v))
+    coo = adj.tocoo()
+    want = np.asarray(sparse_attention_ref(coo.rows, coo.cols, q, k, v,
+                                           n_rows=16))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    with pytest.raises(ValueError, match="parallel"):
+        sparse_attention(adj, q, k, v,
+                         schedule=Schedule("eb", strategy="parallel"))
+
+
+def test_graph_attention_multihead():
+    from repro.models.attention import graph_attention
+
+    adj = random_csr(12, 12, density=0.25, seed=2)
+    coo = adj.tocoo()
+    q = jax.random.normal(jax.random.PRNGKey(0), (12, 2, 4))
+    k = jax.random.normal(jax.random.PRNGKey(1), (12, 2, 4))
+    v = jax.random.normal(jax.random.PRNGKey(2), (12, 2, 4))
+    got = np.asarray(graph_attention(adj, q, k, v))
+    assert got.shape == (12, 2, 4)
+    for h in range(2):
+        want = np.asarray(sparse_attention_ref(
+            coo.rows, coo.cols, q[:, h], k[:, h], v[:, h], n_rows=12))
+        np.testing.assert_allclose(got[:, h], want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Satellites: GroupedCOO regroup memoization + sddmm no-scale fast path
+# ---------------------------------------------------------------------------
+
+
+def test_groupedcoo_regroup_is_memoized():
+    csr = random_csr(50, 50, density=0.05, seed=8)
+    g = csr.grouped(64)
+    assert g.regrouped(64) is g  # tile match: no work at all
+    r1 = g.regrouped(128)
+    assert r1 is g.regrouped(128)  # converted once
+    assert r1 is not g.regrouped(256)
+    assert r1.nnz == g.nnz and r1.nnz_padded % 128 == 0
+    # a GroupedCOO fed to spmm under a different tuned tile still matches
+    b = jax.random.normal(jax.random.PRNGKey(0), (50, 4))
+    got = spmm(g, b, schedule=Schedule("eb", nnz_tile=128, col_tile=8,
+                                       group_size=8))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(spmm(csr, b, impl="ref")),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_sddmm_none_scale_fast_path_matches():
+    csr = random_csr(40, 30, density=0.08, seed=6)
+    coo = csr.tocoo()
+    a = jax.random.normal(jax.random.PRNGKey(0), (40, 12))
+    b = jax.random.normal(jax.random.PRNGKey(1), (30, 12))
+    want = np.asarray(ref.sddmm_ref(coo.rows, coo.cols, a, b))
+    got = np.asarray(sddmm(coo.rows, coo.cols, a, b, nnz_tile=64))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # and the scaled path still masks padding via scale=0
+    got_s = np.asarray(sddmm(coo.rows, coo.cols, a, b, coo.vals,
+                             nnz_tile=64))
+    np.testing.assert_allclose(
+        got_s, np.asarray(ref.sddmm_ref(coo.rows, coo.cols, a, b,
+                                        coo.vals)),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Tuner epilogue-awareness
+# ---------------------------------------------------------------------------
+
+
+def test_tuner_is_epilogue_aware():
+    from repro.tune import ScheduleCache, tune_schedule
+    from repro.tune.search import schedule_key
+
+    csr = random_csr(64, 64, density=0.05, seed=4)
+    cache = ScheduleCache(path=None)
+    ep = Epilogue(activation="relu", bias=True)
+    calls = []
+
+    def fake_measure(s):
+        calls.append(s)
+        return 1e-6
+
+    res_plain = tune_schedule(csr, 8, cache=cache, measure=fake_measure)
+    n_plain = len(calls)
+    res_ep = tune_schedule(csr, 8, cache=cache, measure=fake_measure,
+                           epilogue=ep)
+    # separate cache keys: the epilogued workload never replays plain
+    assert res_plain.key != res_ep.key and "ep:" in res_ep.key
+    # every measured candidate carried the epilogue into the objective
+    ep_calls = calls[n_plain:]
+    assert ep_calls and all(s.epilogue == ep for s in ep_calls)
+    assert all("ep[" in schedule_key(s) for s in ep_calls)
+    assert res_ep.schedule.epilogue == ep
+    # replay: zero measurements on the second epilogued call
+    res_hit = tune_schedule(csr, 8, cache=cache, measure=fake_measure,
+                            epilogue=ep)
+    assert res_hit.from_cache and res_hit.schedule.epilogue == ep
+
+
+def test_schedule_epilogue_roundtrips_through_cache_json():
+    from repro.tune.cache import TuneRecord
+
+    s = Schedule("eb", nnz_tile=64, group_size=8,
+                 epilogue=Epilogue(activation="gelu", bias=True,
+                                   out_dtype="bfloat16"))
+    rec = TuneRecord(schedule=s, us_per_call=12.5)
+    back = TuneRecord.from_json(rec.to_json())
+    assert back.schedule == s
+    assert back.schedule.epilogue.activation == "gelu"
