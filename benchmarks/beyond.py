@@ -151,6 +151,106 @@ def fused_attention(quick=True):
     return rows_out
 
 
+def fused_attention_bwd(quick=True):
+    """Fused one-launch attention *backward* vs the spec-recompute VJP
+    composed of kernel passes (ISSUE 5).
+
+    The fused side is ``kernels.fused_attention_bwd``: one (H, 2,
+    nnz_tiles) launch recomputing probabilities from the forward's
+    (m, l) residuals, scattering δ and dV in phase 0 and dQ/dK in phase
+    1.  The unfused side realizes the PR-4 spec-recompute VJP as the
+    kernel passes training actually paid: SDDMM (score recompute) →
+    segment-max → segment-sum (weights) → SDDMM (dw) → segment-sum (δ)
+    → three transpose/plain SpMM passes (dV, dQ, dK) — 8 kernel
+    launches with (nnz,)-sized intermediates between them.  The jitted
+    pure-JAX spec VJP is reported as info alongside."""
+    from repro.kernels import ops as kops
+    from repro.kernels.fused_attention import (
+        fused_sparse_attention,
+        fused_sparse_attention_bwd,
+        sparse_attention_bwd_ref,
+    )
+    from repro.sparse import Schedule
+    from repro.sparse import sddmm as sddmm_op
+    from repro.sparse import segment_reduce as seg_reduce
+    from repro.sparse.formats import GroupedCOO, round_up
+
+    d, dv = (32, 32) if quick else (64, 64)
+    # same size policy as the forward bench: the CI gate consumes the
+    # us geomean, so quick mode sticks to contention-robust sizes
+    sizes = ((256, 256), (512, 512)) if quick else \
+        ((1024, 1024), (2048, 2048))
+    mats = suite(sizes=sizes, densities=(0.01,), skews=(0.0, 1.5))
+    sched = Schedule("eb", nnz_tile=256, group_size=32)
+    rows_out, wins = [], []
+    for (m, n, dens, s), csr in mats:
+        coo = csr.tocoo()
+        rows, cols = coo.rows, coo.cols
+        nnz = csr.nnz
+        q = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+        k = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+        v = jax.random.normal(jax.random.PRNGKey(2), (n, dv))
+        dout = jax.random.normal(jax.random.PRNGKey(3), (m, dv))
+        scale = d ** -0.5
+        nnz_pad = max(round_up(max(nnz, 1), 256), 256)
+        pad = nnz_pad - nnz
+        rows_p = jnp.pad(rows, (0, pad))
+        cols_p = jnp.pad(cols, (0, pad))
+        # the (m, l) residuals the custom VJP carries across fwd -> bwd
+        _, mst, lst = fused_sparse_attention(
+            rows_p, cols_p, q[None], k[None], v[None], n_rows=m, nnz=nnz,
+            nnz_tile=256, dv_tile=dv, scale=scale,
+            group_size=sched.group_size, strategy=sched.strategy)
+
+        def fused(q, k, v, do):
+            return fused_sparse_attention_bwd(
+                rows_p, cols_p, q[None], k[None], v[None], do[None],
+                mst, lst, n_rows=m, nnz=nnz, nnz_tile=256, scale=scale,
+                group_size=sched.group_size, strategy=sched.strategy)
+
+        def unfused(q, k, v, do):
+            sc = sddmm_op(rows, cols, q, k) * scale          # pass 1
+            mx = seg_reduce(rows, sc[:, None], m, schedule=sched,
+                            op="max")[:, 0]                  # pass 2
+            mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+            p = jnp.exp(sc - mx[rows])
+            tot = seg_reduce(rows, p[:, None], m,
+                             schedule=sched)[:, 0]           # pass 3
+            w = p / jnp.maximum(tot[rows], 1e-30)
+            dw = sddmm_op(rows, cols, do, v)                 # pass 4
+            delta = seg_reduce(rows, (w * dw)[:, None], m,
+                               schedule=sched)[:, 0]         # pass 5
+            ds = w * (dw - delta[rows]) * scale
+
+            def grouped(r, c, vals, shape):
+                return GroupedCOO(rows=r, cols=c,
+                                  vals=jnp.pad(vals, (0, pad)),
+                                  shape=shape, nnz=nnz, nnz_tile=256)
+
+            dv_ = kops.spmm(grouped(cols_p, rows_p, w, (n, m)),
+                            do, sched)                       # pass 6
+            dq = kops.spmm(grouped(rows_p, cols_p, ds, (m, n)),
+                           k, sched)                         # pass 7
+            dk = kops.spmm(grouped(cols_p, rows_p, ds, (n, m)),
+                           q, sched)                         # pass 8
+            return dq, dk, dv_
+
+        spec = jax.jit(lambda q, k, v, do: sparse_attention_bwd_ref(
+            rows, cols, q, k, v, do, n_rows=m, scale=scale))
+        t_fused = time_fn(fused, q, k, v, dout, warmup=1, iters=3)
+        t_unfused = time_fn(unfused, q, k, v, dout, warmup=1, iters=3)
+        t_spec = time_fn(spec, q, k, v, dout, warmup=1, iters=3)
+        wins.append(t_unfused / max(t_fused, 1e-12))
+        rows_out.append((f"beyond/fused_attention_bwd/m{m}_skew{s}",
+                         t_fused * 1e6,
+                         f"unfused_us={t_unfused * 1e6:.1f},"
+                         f"spec_vjp_us={t_spec * 1e6:.1f},"
+                         f"fused_bwd_vs_unfused={wins[-1]:.3f},nnz={nnz}"))
+    rows_out.append(("beyond/fused_attention_bwd_gap", 0.0,
+                     f"fused_bwd_vs_unfused_geomean={geomean(wins):.3f}"))
+    return rows_out
+
+
 def selector_quality(quick=True):
     """Behavioral check of the data-aware selector (DA-SpMM-style): it
     must choose nnz-split + segment for skewed matrices (balance-bound)

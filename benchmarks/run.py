@@ -46,7 +46,8 @@ def main() -> None:
                     help="larger matrices (slower, closer to paper scale)")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
-                         "moe,moe_tuner,selector,fused_attention")
+                         "moe,moe_tuner,selector,fused_attention,"
+                         "fused_attention_bwd")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write {name: {us_per_call, derived}} JSON")
     args = ap.parse_args()
@@ -64,6 +65,7 @@ def main() -> None:
         "moe_tuner": lambda: beyond.moe_tuner_gap(quick),
         "selector": lambda: beyond.selector_quality(quick),
         "fused_attention": lambda: beyond.fused_attention(quick),
+        "fused_attention_bwd": lambda: beyond.fused_attention_bwd(quick),
     }
     wanted = args.only.split(",") if args.only else list(benches)
     unknown = [w for w in wanted if w not in benches]

@@ -7,6 +7,8 @@ padding/format wrappers the framework calls.
 from . import ref  # noqa: F401
 from .fused_attention import (  # noqa: F401
     fused_sparse_attention,
+    fused_sparse_attention_bwd,
+    sparse_attention_bwd_ref,
     sparse_attention_ref,
 )
 from .grouped_matmul import grouped_matmul  # noqa: F401

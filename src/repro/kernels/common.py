@@ -55,6 +55,28 @@ from ..core.schedule import (
 
 _ADD = MONOIDS["add"]
 
+#: Finite masked-lane score floor shared by the attention kernels.  The
+#: value is deliberately representable in float32 but NOT in float16
+#: (fp16 max ~6.5e4): any kernel that compared or accumulated scores in
+#: a low-precision input dtype would overflow it to -inf and poison the
+#: online-softmax rescale (exp(-inf - -inf) = NaN).  Kernels must
+#: therefore run score arithmetic through :func:`upcast_f32` — the floor
+#: doubles as a tripwire for precision regressions.
+NEG_INF = -1e30
+
+
+def upcast_f32(*xs):
+    """Force float32 compute for (possibly fp16/bf16) kernel operands.
+
+    Score accumulation, online-softmax statistics and the probability
+    algebra must happen in f32 regardless of the storage dtype: besides
+    the :data:`NEG_INF` floor overflowing fp16, bf16's 8-bit mantissa
+    loses the `exp(s - m)` cancellation.  Returns one array for one
+    argument, a tuple otherwise.
+    """
+    out = tuple(x.astype(jnp.float32) for x in xs)
+    return out[0] if len(out) == 1 else out
+
 
 def _rmw_row(out_ref, row, delta, combine):
     """out_ref[row, :] = combine(out_ref[row, :], delta); delta (1, C),

@@ -16,7 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from ..kernels.common import NEG_INF  # shared masked-lane floor
 
 
 def _chunk(x, axis, size):
@@ -181,26 +181,19 @@ def graph_attention(adj, q, k, v, *, schedule=None, scale=None,
                     interpret: bool = True):
     """Sparse (graph) attention over an adjacency pattern through the
     fused one-pass SDDMM→softmax→SpMM kernel
-    (``repro.sparse.sparse_attention``).
+    (``repro.sparse.sparse_attention``), fused in both directions.
 
     Single-head: q (n_rows, d), k/v (n_cols, d/dv).  Multi-head: q
     (n_rows, H, d) with k/v (n_cols, H, ·) — heads share the sparsity
-    pattern and run the kernel per head (the pattern conversion is
-    cached on the CSR, so H heads pay it once).
+    pattern and ALL run in one kernel launch (the head axis is folded
+    into the fused kernel's grid; no Python head loop).  A CSR
+    adjacency's stored values act as an additive score bias (edge
+    features); see ``repro.sparse.sparse_attention``.
     """
     from ..sparse import sparse_attention
 
-    if q.ndim == 2:
-        return sparse_attention(adj, q, k, v, schedule=schedule,
-                                scale=scale, interpret=interpret)
-    assert q.ndim == 3 and k.ndim == 3 and v.ndim == 3, (q.shape, k.shape)
-    outs = [sparse_attention(adj, q[:, h], k[:, h], v[:, h],
-                             schedule=schedule, scale=scale,
-                             interpret=interpret)
-            for h in range(q.shape[1])]
-    import jax.numpy as _jnp
-
-    return _jnp.stack(outs, axis=1)
+    return sparse_attention(adj, q, k, v, schedule=schedule, scale=scale,
+                            interpret=interpret)
 
 
 def attention_ref(q, k, v, causal=True):

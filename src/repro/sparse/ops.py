@@ -20,12 +20,18 @@ Fusion surface (DESIGN.md §8):
   group machinery (graph pooling); ``mean`` is the add monoid with a
   fused count column (one kernel pass + a divide).
 * ``sparse_attention`` is the one-pass SDDMM → segment softmax → SpMM
-  kernel with online renormalization (``kernels.fused_attention``).
+  kernel with online renormalization (``kernels.fused_attention``),
+  batched over heads in one launch, with CSR stored values as an
+  additive score bias.
 
 ``spmm`` over CSR and ``sparse_attention`` are differentiable: forwards
-run the scheduled Pallas kernels, backwards close the paper's algebra
-family on itself (SDDMM / transpose-SpMM / segment ops — Sgap Eq. 2c/2d)
-through the pure-JAX oracles.  Feed-format conversions go through the
+run the scheduled Pallas kernels; ``spmm``'s backward closes the paper's
+algebra family on itself (SDDMM / transpose-SpMM / segment ops — Sgap
+Eq. 2c/2d) through the pure-JAX oracles, while ``sparse_attention``'s
+backward is itself a fused Pallas kernel (DESIGN.md §9): one launch
+recomputes the probabilities from the saved softmax row stats, scatters
+the softmax-backward row dot δ, and scatter-transposes dK/dV.
+Feed-format conversions go through the
 per-(format, tile) caches on ``CSR``/``GroupedCOO``, so serving loops
 re-using the same matrix do not re-convert every call.
 """
@@ -38,7 +44,10 @@ from ..core.schedule import Epilogue, Schedule, as_schedule
 from ..kernels import ops as kops
 from ..kernels import ref
 from ..kernels.fused_attention import (
-    fused_sparse_attention as _fused_attn_kernel,
+    fused_sparse_attention as _fused_attn_fwd,
+)
+from ..kernels.fused_attention import (
+    fused_sparse_attention_bwd as _fused_attn_bwd,
 )
 from ..kernels.fused_attention import sparse_attention_ref
 from ..kernels.segment_reduce import segment_reduce as _segment_reduce_kernel
@@ -254,97 +263,148 @@ def segment_reduce(seg_ids, data, num_segments: int, schedule=None, *,
 
 
 def _attn_pattern(adj):
-    """(rows, cols, n_rows) from a CSR adjacency (pattern only; values
-    are ignored) or an explicit ``(rows, cols, n_rows)`` tuple."""
+    """``(rows, cols, n_rows, bias)`` from an adjacency.
+
+    A CSR adjacency contributes its *stored values* as an additive
+    attention-score bias: ``s[t] = <Q[r_t], K[c_t]>·scale + vals[t]``
+    (edge features / relative-position biases ride the adjacency).  The
+    softmax is invariant to a per-row-constant shift, so the canonical
+    all-ones "pattern" CSR attends identically to a pure pattern — but
+    non-constant values now *matter* (they used to be silently ignored).
+    An explicit ``(rows, cols, n_rows)`` tuple is a pure pattern
+    (``bias=None``).
+    """
     if isinstance(adj, CSR):
         coo = adj.tocoo()
-        return coo.rows, coo.cols, adj.shape[0]
+        return coo.rows, coo.cols, adj.shape[0], coo.vals
     rows, cols, n_rows = adj
-    return rows, cols, int(n_rows)
+    return rows, cols, int(n_rows), None
+
+
+def _attn_heads(q, k, v):
+    """Normalize q/k/v to the kernel's head-major (H, n, ·) layout.
+    2-D inputs are a single head; 3-D inputs are (n, H, ·) — heads on
+    axis 1, matching ``models.attention``.  Returns (qh, kh, vh, multi).
+    """
+    if q.ndim == k.ndim == v.ndim == 2:
+        return q[None], k[None], v[None], False
+    if not (q.ndim == k.ndim == v.ndim == 3
+            and q.shape[1] == k.shape[1] == v.shape[1]):
+        raise ValueError(
+            f"attention wants all-2-D (n, d) q/k/v or all-3-D (n, H, d) "
+            f"with one shared head count H; got {q.shape}, {k.shape}, "
+            f"{v.shape}")
+    return (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+            jnp.moveaxis(v, 1, 0), True)
 
 
 def sparse_attention(adj, q, k, v, *, schedule=None,
                      scale: float | None = None, impl: str = "pallas",
                      interpret: bool = True):
     """One-pass sparse attention over a sparsity pattern:
-    ``out[r] = Σ_t softmax_row(<Q[r], K[c_t]> · scale) V[c_t]``.
+    ``out[r] = Σ_t softmax_row(<Q[r], K[c_t]> · scale + bias_t) V[c_t]``.
 
-    adj       a CSR adjacency (its pattern is attended over; values are
-              ignored) or a ``(rows, cols, n_rows)`` tuple with rows
+    adj       a CSR adjacency — its pattern is attended over and its
+              stored values are an additive score bias (row-constant
+              values, e.g. the all-ones pattern CSR, cancel in the
+              softmax; see :func:`_attn_pattern`) — or a
+              ``(rows, cols, n_rows)`` pure-pattern tuple with rows
               sorted non-decreasing (CSR order).
-    q         (n_rows, d) queries;  k: (n_cols, d) keys;
-    v         (n_cols, dv) values.
+    q         (n_rows, d) queries, or (n_rows, H, d) for H heads;
+    k         (n_cols, d) / (n_cols, H, d) keys;
+    v         (n_cols, dv) / (n_cols, H, dv) values.  All H heads share
+              the pattern and run in ONE kernel launch (the head axis is
+              folded into the kernel grid).
     schedule  supplies (nnz_tile, group_size, strategy) for the fused
-              kernel's grid; 'parallel' is excluded (its one-writeback
-              contract does not hold for attention rows).
+              kernel's grid; ``"tune"`` measures the real fused kernel
+              for this pattern (``repro.tune.tune_sparse_attention``,
+              cached by pattern fingerprint × head count × direction);
+              'parallel' is excluded (its one-writeback contract does
+              not hold for attention rows).
     impl      'pallas' (the fused kernel — SDDMM → online segment
               softmax → SpMM in one pass) or 'ref' (the spec oracle).
 
-    Differentiable in q, k, v (custom VJP through the spec's algebra:
-    softmax backward + SDDMM/transpose-SpMM).  Empty rows -> zero rows.
+    Differentiable in q, k, v — the custom VJP runs the fused *backward*
+    kernel (one launch over (H, 2, nnz_tiles): δ scatter + dV transpose,
+    then dQ/dK from the carried probabilities), so ``impl="pallas"`` is
+    fused in both directions.  The adjacency — pattern AND value bias —
+    is *data*, not a differentiable operand: gradients w.r.t. the CSR's
+    stored values are not defined (pass the bias through q/k features if
+    it must be learned).  ``schedule="tune"`` tunes the forward grid;
+    the backward reuses that schedule (tuning the bwd direction from the
+    training loop is a ROADMAP follow-on —
+    ``tune_sparse_attention(direction="bwd")`` exists for it).  Empty
+    rows -> zero rows.
     """
-    rows, cols, n_rows = _attn_pattern(adj)
+    rows, cols, n_rows, bias = _attn_pattern(adj)
     if scale is None:
         scale = float(q.shape[-1]) ** -0.5
+    qh, kh, vh, multi = _attn_heads(q, k, v)
     if impl == "ref":
-        return sparse_attention_ref(rows, cols, q, k, v, n_rows=n_rows,
-                                    scale=scale)
-    sched = as_schedule(schedule)
+        outs = [sparse_attention_ref(rows, cols, qh[h], kh[h], vh[h],
+                                     n_rows=n_rows, scale=scale, bias=bias)
+                for h in range(qh.shape[0])]
+        out = jnp.stack(outs, axis=0)
+        return jnp.moveaxis(out, 0, 1) if multi else out[0]
+    if isinstance(schedule, str) and schedule == "tune":
+        from ..tune import tune_sparse_attention
+
+        sched = tune_sparse_attention(
+            rows, cols, q, k, v, n_rows=n_rows, bias=bias, scale=scale,
+            interpret=interpret).schedule
+    else:
+        sched = as_schedule(schedule)
     if sched.strategy == "parallel":
         raise ValueError(
             "sparse_attention cannot run the 'parallel' strategy: its "
             "single-writeback contract does not hold for attention rows")
-    return _sparse_attention_diff(rows, cols, q, k, v, n_rows, scale,
-                                  sched, interpret)
+    out = _sparse_attention_diff(rows, cols, qh, kh, vh, n_rows, scale,
+                                 sched, interpret, bias)
+    return jnp.moveaxis(out, 0, 1) if multi else out[0]
 
 
-def _sparse_attention_diff(rows, cols, q, k, v, n_rows, scale, sched,
-                           interpret):
+def _sparse_attention_diff(rows, cols, qh, kh, vh, n_rows, scale, sched,
+                           interpret, bias=None):
+    """Custom-VJP core over head-major (H, n, ·) operands: fused Pallas
+    forward (saving the (m, l) softmax row stats — the O(H·n_rows)
+    FlashAttention residuals), fused Pallas backward."""
     nnz = int(rows.shape[0])
     nnz_tile = sched.nnz_tile
     nnz_pad = max(round_up(max(nnz, 1), nnz_tile), nnz_tile)
     rows_p = jnp.pad(rows, (0, nnz_pad - nnz))
     cols_p = jnp.pad(cols, (0, nnz_pad - nnz))
-    dv = v.shape[1]
+    bias_p = (None if bias is None
+              else jnp.pad(bias.astype(jnp.float32), (0, nnz_pad - nnz)))
+    dv = vh.shape[-1]
     dv_tile = min(128, round_up(dv, 8))
     dv_pad = round_up(dv, dv_tile)
 
-    @jax.custom_vjp
-    def fn(q, k, v):
-        v_p = (jnp.pad(v, ((0, 0), (0, dv_pad - dv)))
+    def run_fwd(q, k, v):
+        v_p = (jnp.pad(v, ((0, 0), (0, 0), (0, dv_pad - dv)))
                if dv_pad != dv else v)
-        out, _m, _l = _fused_attn_kernel(
+        out, m, l = _fused_attn_fwd(
             rows_p, cols_p, q, k, v_p, n_rows=n_rows, nnz=nnz,
             nnz_tile=nnz_tile, dv_tile=dv_tile, scale=scale,
             group_size=sched.group_size, strategy=sched.strategy,
-            interpret=interpret)
-        return out[:, :dv]
+            bias=bias_p, interpret=interpret)
+        return out[..., :dv], m, l
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        return run_fwd(q, k, v)[0]
 
     def fwd(q, k, v):
-        return fn(q, k, v), (q, k, v)
+        out, m, l = run_fwd(q, k, v)
+        return out, (q, k, v, m, l)
 
     def bwd(res, dout):
-        from ..kernels.fused_attention import sparse_softmax_weights
-
-        q, k, v = res
-        qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
-        do = dout.astype(jnp.float32)
-        # recompute the softmax weights through the shared spec helper
-        w = sparse_softmax_weights(rows, cols, q, k, n_rows=n_rows,
-                                   scale=scale)  # (nnz,)
-        # value gradient: transpose-SpMM of the weighted cotangent
-        dv_ = jax.ops.segment_sum(w[:, None] * do[rows], cols,
-                                  num_segments=v.shape[0])
-        # softmax backward per row: ds = w (dw - Σ_row w dw)
-        dw = jnp.sum(do[rows] * vf[cols], axis=-1)  # SDDMM(dout, V)
-        delta = jax.ops.segment_sum(w * dw, rows, num_segments=n_rows)
-        ds = w * (dw - delta[rows]) * scale
-        dq = jax.ops.segment_sum(ds[:, None] * kf[cols], rows,
-                                 num_segments=n_rows)
-        dk = jax.ops.segment_sum(ds[:, None] * qf[rows], cols,
-                                 num_segments=k.shape[0])
+        q, k, v, m, l = res
+        dq, dk, dv_ = _fused_attn_bwd(
+            rows_p, cols_p, q, k, v, dout, m, l, n_rows=n_rows, nnz=nnz,
+            nnz_tile=nnz_tile, scale=scale, group_size=sched.group_size,
+            strategy=sched.strategy, bias=bias_p, interpret=interpret)
         return (dq.astype(q.dtype), dk.astype(k.dtype),
                 dv_.astype(v.dtype))
 
     fn.defvjp(fwd, bwd)
-    return fn(q, k, v)
+    return fn(qh, kh, vh)

@@ -12,7 +12,9 @@ model.  ``tune_moe_dispatch`` applies the same machinery to the MoE
 grouped-matmul dispatch space (token_tile × capacity × f/d tiles, keyed
 by the expert-segment histogram), and the cache is namespaced per
 backend + device kind so fleets ship pre-tuned files per hardware
-generation.  See DESIGN.md §6–§7.
+generation.  ``tune_sparse_attention`` tunes the fused attention
+kernels, keyed per direction (fwd/bwd) and head count.  See DESIGN.md
+§6–§7, §9.
 """
 from .cache import (  # noqa: F401
     SCHEMA_VERSION,
@@ -26,6 +28,10 @@ from .cache import (  # noqa: F401
     fingerprint_from_lengths,
     legacy_cache_path,
     set_default_cache,
+)
+from .attention import (  # noqa: F401
+    attention_cache_key,
+    tune_sparse_attention,
 )
 from .calibrate import (  # noqa: F401
     CalibrationResult,

@@ -375,9 +375,10 @@ def test_sparse_attention_accepts_csr_and_rejects_parallel():
     k = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
     v = jax.random.normal(jax.random.PRNGKey(2), (16, 4))
     got = np.asarray(sparse_attention(adj, q, k, v))
+    # a CSR's stored values are an additive score bias (ISSUE 5)
     coo = adj.tocoo()
     want = np.asarray(sparse_attention_ref(coo.rows, coo.cols, q, k, v,
-                                           n_rows=16))
+                                           n_rows=16, bias=coo.vals))
     np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
     with pytest.raises(ValueError, match="parallel"):
         sparse_attention(adj, q, k, v,
@@ -396,7 +397,8 @@ def test_graph_attention_multihead():
     assert got.shape == (12, 2, 4)
     for h in range(2):
         want = np.asarray(sparse_attention_ref(
-            coo.rows, coo.cols, q[:, h], k[:, h], v[:, h], n_rows=12))
+            coo.rows, coo.cols, q[:, h], k[:, h], v[:, h], n_rows=12,
+            bias=coo.vals))
         np.testing.assert_allclose(got[:, h], want, rtol=RTOL, atol=ATOL)
 
 
