@@ -251,6 +251,80 @@ def fused_attention_bwd(quick=True):
     return rows_out
 
 
+def fusion_planner(quick=True):
+    """Planner-fused vs fully-split execution of the landed chains
+    (ISSUE 6): the two-layer GCN chain (spmm → ewise → spmm, 2 launches
+    fused vs 2 launches + 1 XLA elementwise pass split) and the MoE
+    expert-GEMM chain (grouped_matmul → ewise, 1 launch fused vs GEMM +
+    XLA SiLU pass).  Each row times ``run_plan`` on the greedy plan
+    against the ``split_all`` plan of the *same* chain; the tuner's
+    pick is recorded through a memory-only cache and reported in-band
+    so the bench doubles as a tune_plan smoke."""
+    import numpy as _np
+
+    import repro.fuse as F
+    from repro.sparse import Schedule
+    from repro.tune import ScheduleCache
+
+    sched = Schedule("eb", nnz_tile=256, group_size=32)
+    cache = ScheduleCache(path=None)  # never touch the user's cache
+    rows, wins = [], []
+
+    # two-layer GCN chains over the synthetic suite
+    sizes = ((256, 256), (512, 512)) if quick else \
+        ((1024, 1024), (2048, 2048))
+    mats = suite(sizes=sizes, densities=(0.01,), skews=(0.0, 1.5))
+    c = 32 if quick else 64
+    rng = _np.random.default_rng(0)
+    for (m, n, dens, s), csr in mats:
+        x = jnp.asarray(rng.normal(size=(m, c)), jnp.float32)
+        w0 = jnp.asarray(rng.normal(size=(c, c)) * c ** -0.5, jnp.float32)
+        w1 = jnp.asarray(rng.normal(size=(c, c)) * c ** -0.5, jnp.float32)
+        b0 = jnp.asarray(rng.normal(size=(c,)), jnp.float32)
+        chain, params = F.gcn_chain(csr, (w0, w1), (b0, None),
+                                    schedule=sched)
+        fused, split = F.plan(chain), F.split_all(chain)
+        t_fused = time_fn(lambda xx, p=fused, pr=params:
+                          F.run_plan(p, xx, pr), x, warmup=1, iters=3)
+        t_split = time_fn(lambda xx, p=split, pr=params:
+                          F.run_plan(p, xx, pr), x, warmup=1, iters=3)
+        res = F.tune_plan(chain, x, params, cache=cache, warmup=1, iters=2)
+        wins.append(t_split / max(t_fused, 1e-12))
+        rows.append((f"beyond/fusion_planner/gcn_m{m}_skew{s}",
+                     t_fused * 1e6,
+                     f"split_us={t_split * 1e6:.1f},"
+                     f"launches={fused.n_launches},"
+                     f"tuned={res.schedule.tag},"
+                     f"fused_vs_split={wins[-1]:.3f}"))
+
+    # MoE expert-GEMM chain (SiLU + per-expert bias on the output block)
+    tile = 128
+    t_tiles = 4 if quick else 16
+    d = f = 128 if quick else 256
+    e = 8
+    x = jnp.asarray(rng.normal(size=(t_tiles * tile, d)), jnp.float32)
+    te = jnp.asarray(rng.integers(0, e, size=(t_tiles,)), jnp.int32)
+    w = jnp.asarray(rng.normal(size=(e, d, f)) * d ** -0.5, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(e, f)), jnp.float32)
+    chain, params = F.moe_expert_chain(te, w, b, token_tile=tile)
+    fused, split = F.plan(chain), F.split_all(chain)
+    t_fused = time_fn(lambda xx: F.run_plan(fused, xx, params), x,
+                      warmup=1, iters=3)
+    t_split = time_fn(lambda xx: F.run_plan(split, xx, params), x,
+                      warmup=1, iters=3)
+    res = F.tune_plan(chain, x, params, cache=cache, warmup=1, iters=2)
+    wins.append(t_split / max(t_fused, 1e-12))
+    rows.append((f"beyond/fusion_planner/moe_t{t_tiles * tile}",
+                 t_fused * 1e6,
+                 f"split_us={t_split * 1e6:.1f},"
+                 f"launches={fused.n_launches},tuned={res.schedule.tag},"
+                 f"fused_vs_split={wins[-1]:.3f}"))
+
+    rows.append(("beyond/fusion_planner_gap", 0.0,
+                 f"fused_vs_split_geomean={geomean(wins):.3f}"))
+    return rows
+
+
 def selector_quality(quick=True):
     """Behavioral check of the data-aware selector (DA-SpMM-style): it
     must choose nnz-split + segment for skewed matrices (balance-bound)

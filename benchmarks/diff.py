@@ -5,8 +5,8 @@ Compares ``BENCH_<tag>.json`` artifacts (as written by
 ``benchmarks.run --json``) and exits non-zero when the new run regresses
 past a threshold.  Signals checked:
 
-* **us_per_call geomeans** per row group (default groups: ``table5``
-  and ``beyond/fused_attention_bwd``):
+* **us_per_call geomeans** per row group (default groups: ``table5``,
+  ``beyond/fused_attention_bwd`` and ``beyond/fusion_planner``):
   geomean over the names both artifacts share.  When both artifacts
   carry the ``probe/runner_speed`` row (a fixed dense-matmul timing
   baked into every artifact), the geomeans are **normalized by the
@@ -50,10 +50,12 @@ import re
 import sys
 
 # groups whose probe-normalized us geomeans gate: table5 (the paper's
-# headline kernels) and the fused attention backward (ISSUE 5 — its
-# first appearance in a trajectory has no shared rows and skips green;
-# thereafter a >threshold normalized slowdown fails)
-DEFAULT_GROUPS = ("table5", "beyond/fused_attention_bwd")
+# headline kernels), the fused attention backward (ISSUE 5), and the
+# fusion planner's fused chains (ISSUE 6).  A group's *first* appearance
+# in a trajectory has no shared rows and skips green; thereafter a
+# >threshold normalized slowdown fails.
+DEFAULT_GROUPS = ("table5", "beyond/fused_attention_bwd",
+                  "beyond/fusion_planner")
 DEFAULT_WINDOW = 5
 PROBE_ROW = "probe/runner_speed"
 TRAJECTORY_VERSION = 1

@@ -47,7 +47,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
                          "moe,moe_tuner,selector,fused_attention,"
-                         "fused_attention_bwd")
+                         "fused_attention_bwd,fusion_planner")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write {name: {us_per_call, derived}} JSON")
     args = ap.parse_args()
@@ -66,6 +66,7 @@ def main() -> None:
         "selector": lambda: beyond.selector_quality(quick),
         "fused_attention": lambda: beyond.fused_attention(quick),
         "fused_attention_bwd": lambda: beyond.fused_attention_bwd(quick),
+        "fusion_planner": lambda: beyond.fusion_planner(quick),
     }
     wanted = args.only.split(",") if args.only else list(benches)
     unknown = [w for w in wanted if w not in benches]

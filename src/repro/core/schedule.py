@@ -353,6 +353,39 @@ class Epilogue:
             acc = acc.astype(jnp.dtype(self.out_dtype))
         return acc
 
+    def extended(self, tail: "Epilogue") -> "Optional[Epilogue]":
+        """Absorb ``tail`` (elementwise work that would run *after* this
+        epilogue) into one fused epilogue, or return ``None`` when the
+        fixed template order — ``cast(act(acc + bias) + residual)`` —
+        cannot express the composition.
+
+        This is the planner-rule target of ``repro.fuse``: an ``ewise``
+        chain node fuses into the producing kernel's launch exactly when
+        ``producer.epilogue.extended(node.epilogue)`` is not ``None``.
+        The template absorbs fields strictly left to right, so a bias
+        cannot land after an activation already did, a second activation
+        never merges, and nothing lands after a dtype cast.
+        """
+        merged = self
+        if self.out_dtype and not tail.is_noop:
+            return None  # the cast is terminal: nothing fuses past it
+        if tail.bias:
+            if merged.bias or merged.activation or merged.residual:
+                return None  # bias slot is before act/residual
+            merged = dataclasses.replace(merged, bias=True)
+        if tail.activation:
+            if merged.activation or merged.residual:
+                return None  # one activation, before the residual
+            merged = dataclasses.replace(merged,
+                                         activation=tail.activation)
+        if tail.residual:
+            if merged.residual:
+                return None
+            merged = dataclasses.replace(merged, residual=True)
+        if tail.out_dtype:
+            merged = dataclasses.replace(merged, out_dtype=tail.out_dtype)
+        return merged
+
 
 # ---------------------------------------------------------------------------
 # The unified Schedule object

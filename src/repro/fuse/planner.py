@@ -1,0 +1,172 @@
+"""The fusion planner: chain → :class:`~repro.fuse.ir.FusePlan`.
+
+``plan`` walks the chain left to right, growing the current launch while
+the rule registry (``repro.fuse.rules``) keeps fusing and opening a new
+launch when it refuses — a greedy pass, optimal for straight-line chains
+(the only shape the IR expresses: every boundary decision is local to
+one launch).
+
+``tune_plan`` is the measured version: fuse/split is a *scheduling*
+decision, not just a legality one (a fused epilogue can lose to XLA's
+own fusion on tiny tiles), so it times the maximally-fused plan against
+the fully-split plan and persists the winning
+:class:`~repro.fuse.ir.FuseDecision` in the schedule cache
+(``fuse:``-prefixed keys, same fingerprint machinery as SpMM tuning) —
+a repeat call replays with zero measurements.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from .ir import FuseDecision, FusePlan, Launch, chain_sig
+from .rules import try_fuse
+
+__all__ = ["plan", "plan_key", "split_all", "tune_plan", "tuned_plan"]
+
+
+def plan(chain, decision: Optional[FuseDecision] = None) -> FusePlan:
+    """Plan a chain.  Without ``decision``, fuse greedily wherever the
+    rules allow; with one (e.g. a tuned replay), fuse a boundary only
+    when the decision asks *and* the rules allow — legality is never
+    overridden by a cached bit."""
+    chain = tuple(chain)
+    if not chain:
+        raise ValueError("empty chain")
+    if decision is not None and len(decision.fused) != len(chain) - 1:
+        raise ValueError(
+            f"decision covers {len(decision.fused)} boundaries, chain "
+            f"has {len(chain) - 1}")
+
+    launches: List[Launch] = []
+    fused_bits: List[bool] = []
+    reasons: List[str] = []
+    anchor, anchor_idx = chain[0], 0
+    epilogue = chain[0].epilogue
+    members = [0]
+
+    def close():
+        launches.append(Launch(anchor=anchor, anchor_idx=anchor_idx,
+                               epilogue=epilogue, members=tuple(members)))
+
+    for i in range(1, len(chain)):
+        node = chain[i]
+        cur = Launch(anchor=anchor, anchor_idx=anchor_idx,
+                     epilogue=epilogue, members=tuple(members))
+        merged, reason, _rule = try_fuse(cur, node)
+        wanted = decision is None or decision.fused[i - 1]
+        if merged is not None and wanted:
+            epilogue = merged
+            members.append(i)
+            fused_bits.append(True)
+            reasons.append("")
+        else:
+            close()
+            anchor, anchor_idx = node, i
+            epilogue = node.epilogue
+            members = [i]
+            fused_bits.append(False)
+            reasons.append(reason if merged is None
+                           else "split by decision")
+    close()
+    return FusePlan(chain=chain, launches=tuple(launches),
+                    decision=FuseDecision(tuple(fused_bits)),
+                    reasons=tuple(reasons))
+
+
+def split_all(chain) -> FusePlan:
+    """The fully-split plan — every node its own launch (the unfused
+    baseline ``tune_plan`` measures against)."""
+    chain = tuple(chain)
+    return plan(chain, FuseDecision((False,) * (len(chain) - 1)))
+
+
+# ---------------------------------------------------------------------------
+# Tuner integration
+# ---------------------------------------------------------------------------
+
+
+def plan_key(chain, x, params) -> str:
+    """Cache key of a (chain, workload) pair: the chain signature plus a
+    fingerprint of each node's operands — sparse matrices contribute
+    their profile fingerprint (two matrices with the same sparsity
+    profile share a record), dense operands their shapes."""
+    from ..tune.cache import fingerprint
+
+    parts = [chain_sig(chain), "x" + "x".join(str(s) for s in x.shape)]
+    for p in params:
+        if not p:
+            continue
+        a = p.get("a")
+        if a is not None:
+            parts.append(fingerprint(a))
+        w = p.get("weights")
+        if w is not None:
+            parts.append("w" + "x".join(str(s) for s in w.shape))
+    return "fuse:" + "|".join(parts)
+
+
+def tune_plan(chain, x, params, *, cache=None,
+              measure: Optional[Callable[[FusePlan], float]] = None,
+              warmup: Optional[int] = None, iters: Optional[int] = None,
+              backend: Optional[str] = None, interpret: bool = True):
+    """Measure fused-vs-split for this chain on this workload and return
+    a :class:`~repro.tune.TuneResult` whose ``.schedule`` is the winning
+    :class:`FuseDecision` (feed it back through :func:`plan`).
+
+    The candidates are the maximally-fused plan and the fully-split
+    plan (identical chains — nothing fusable — measure once).  The
+    winner persists under a ``fuse:`` key (:func:`plan_key`); a repeat
+    call replays the cache with zero measurements.  ``measure``
+    overrides the objective (``FusePlan -> seconds``) for tests."""
+    from ..tune.cache import TuneRecord, default_cache
+    from ..tune.measure import time_fn
+    from ..tune.search import TuneResult, _Memo, _replay
+
+    chain = tuple(chain)
+    if cache is None:
+        cache = default_cache(backend)
+    key = plan_key(chain, x, params)
+    hit = _replay(cache, key)
+    if hit is not None:
+        return hit
+
+    if measure is None:
+        from .execute import run_plan
+
+        def measure(p: FusePlan) -> float:
+            return time_fn(
+                lambda xx: run_plan(p, xx, params, interpret=interpret),
+                x, warmup=warmup, iters=iters)
+
+    fused = plan(chain)
+    candidates = [fused]
+    split = split_all(chain)
+    if split.decision != fused.decision:
+        candidates.append(split)
+
+    memo = _Memo(measure, key_fn=lambda p: p.decision.tag)
+    best = min(candidates, key=memo)
+    result = TuneResult(schedule=best.decision, us_per_call=memo(best),
+                        from_cache=False, key=key,
+                        measured=dict(memo.timings))
+    cache.put(key, TuneRecord(schedule=best.decision,
+                              us_per_call=result.us_per_call,
+                              measured=result.measured))
+    cache.save()
+    return result
+
+
+def tuned_plan(chain, x, params, *, cache=None,
+               backend: Optional[str] = None) -> FusePlan:
+    """Measurement-free resolver: replay the cached decision for this
+    (chain, workload) if one exists, else the greedy maximally-fused
+    plan.  Safe on a serving path."""
+    from ..tune.cache import default_cache
+    from ..tune.search import _replay
+
+    if cache is None:
+        cache = default_cache(backend)
+    hit = _replay(cache, plan_key(tuple(chain), x, params))
+    if hit is not None:
+        return plan(chain, hit.schedule)
+    return plan(chain)

@@ -7,12 +7,17 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.schedule import Schedule
+import jax
+
+from ..core.schedule import ACTIVATIONS, Epilogue, Schedule
 from ..sparse.formats import CSR, ELL, GroupedCOO, round_up
 from . import ref
+from .grouped_matmul import grouped_matmul as _gmm_pallas
 from .sddmm import sddmm as _sddmm_kernel
 from .spmm_eb import spmm_eb as _spmm_eb
 from .spmm_rb import spmm_rb as _spmm_rb
+
+_NOOP_EP = Epilogue()
 
 _VMEM_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
 
@@ -185,3 +190,79 @@ def expert_tile_map(group_sizes: np.ndarray, token_tile: int) -> np.ndarray:
     for e, g in enumerate(group_sizes):
         tiles.extend([e] * int(np.ceil(g / token_tile)))
     return np.asarray(tiles, np.int32)
+
+
+def grouped_matmul_ref(x, tile_experts, weights, *, bias=None,
+                       epilogue: Epilogue = _NOOP_EP,
+                       token_tile: int = 128):
+    """Pure-jnp oracle for the epilogued grouped matmul: per token tile i
+    with expert e = tile_experts[i],
+    ``y = epilogue(x_tile @ weights[e], bias=bias[e])``."""
+    t_pad, d = x.shape
+    xt = x.reshape(-1, token_tile, d).astype(jnp.float32)
+    wt = weights[tile_experts].astype(jnp.float32)  # (NT, D, F)
+    z = jnp.einsum("ntd,ndf->ntf", xt, wt)
+    b = (None if bias is None
+         else bias[tile_experts][:, None, :].astype(jnp.float32))
+    y = epilogue.apply(z, bias=b)
+    return y.reshape(t_pad, -1)
+
+
+def grouped_matmul(x, tile_experts, weights, *, bias=None,
+                   epilogue: Epilogue = _NOOP_EP, token_tile: int = 128,
+                   f_tile: int = 128, d_tile: int = 128,
+                   impl: str = "pallas", interpret: bool = True):
+    """Differentiable epilogued grouped matmul — the MoE expert GEMM as
+    one Pallas launch per tile (GEMM + bias/activation/cast fused onto
+    the output block; ``repro.fuse`` routes ``grouped_matmul`` chain
+    nodes here).
+
+    x (T_pad, D) expert-sorted tokens, tile_experts (T_pad//token_tile,)
+    int32, weights (E, D, F), bias (E, F) iff ``epilogue.bias``.
+    Differentiable in x, weights and bias: Pallas forward, pure-JAX ref
+    backward (recompute z, activation VJP, segment scatter-add into the
+    expert axis).  ``tile_experts`` is routing data, not an operand.
+    """
+    assert epilogue.bias == (bias is not None)
+    if impl == "ref":
+        return grouped_matmul_ref(x, tile_experts, weights, bias=bias,
+                                  epilogue=epilogue, token_tile=token_tile)
+
+    def run(xx, ww, bb):
+        return _gmm_pallas(xx, tile_experts, ww, bias=bb,
+                           epilogue=epilogue, token_tile=token_tile,
+                           f_tile=f_tile, d_tile=d_tile,
+                           interpret=interpret)
+
+    @jax.custom_vjp
+    def fn(xx, ww, bb):
+        return run(xx, ww, bb)
+
+    def fwd(xx, ww, bb):
+        return run(xx, ww, bb), (xx, ww, bb)
+
+    def bwd(res, dout):
+        xx, ww, bb = res
+        t_pad, d = xx.shape
+        f = ww.shape[2]
+        xt = xx.reshape(-1, token_tile, d).astype(jnp.float32)
+        wt = ww[tile_experts].astype(jnp.float32)  # (NT, D, F)
+        dz = dout.astype(jnp.float32).reshape(-1, token_tile, f)
+        if epilogue.activation is not None:
+            z = jnp.einsum("ntd,ndf->ntf", xt, wt)
+            if epilogue.bias:
+                z = z + bb[tile_experts][:, None, :].astype(jnp.float32)
+            _, act_vjp = jax.vjp(ACTIVATIONS[epilogue.activation], z)
+            dz, = act_vjp(dz)
+        dx = jnp.einsum("ntf,ndf->ntd", dz, wt).reshape(t_pad, d).astype(
+            xx.dtype)
+        dw = jnp.zeros(ww.shape, jnp.float32).at[tile_experts].add(
+            jnp.einsum("ntd,ntf->ndf", xt, dz)).astype(ww.dtype)
+        db = None
+        if epilogue.bias:
+            db = jnp.zeros(bb.shape, jnp.float32).at[tile_experts].add(
+                jnp.sum(dz, axis=1)).astype(bb.dtype)
+        return dx, dw, db
+
+    fn.defvjp(fwd, bwd)
+    return fn(x, weights, bias)

@@ -13,7 +13,9 @@ Per grid cell (one ``NNZ_TILE × COL_TILE`` block):
   4. on the *last* nnz step of a column block: the fused epilogue
      (bias / activation / residual / dtype cast — DESIGN.md §8), so a
      GCN layer's ``act(A @ XW + b)`` is one kernel instead of three HBM
-     round trips.
+     round trips.  This epilogue slot is what the fusion planner's
+     ``epilogue-fold`` rule targets (``repro.fuse``, DESIGN.md §10):
+     ewise chain nodes legal under ``Epilogue.extended`` land here.
 
 VMEM working set per cell:  B block (K × COL_TILE) + partials
 (NNZ_TILE × COL_TILE) + out block (n_rows × COL_TILE). The kernel targets

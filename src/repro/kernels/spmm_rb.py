@@ -8,7 +8,9 @@ zero extension the paper legitimizes: padded slots gather B[0] scaled by
 Grid: (row_tiles, col_tiles, width_tiles) — width innermost, accumulating
 into the same (ROW_TILE × COL_TILE) output block; the fused epilogue
 (``core.Epilogue``: bias / activation / residual / dtype cast) runs on
-the last width step, when the block holds the fully-reduced row.
+the last width step, when the block holds the fully-reduced row.  Like
+the EB kernel's, this epilogue slot is a fusion-planner target
+(``repro.fuse`` ``epilogue-fold`` rule, DESIGN.md §10).
 """
 from __future__ import annotations
 

@@ -90,6 +90,31 @@ def gcn_layer(adj, x, w, b=None, *, activation="relu", residual=None,
                 epilogue=ep, interpret=interpret)
 
 
+def gcn_two_layer(adj, x, w0, w1, b0=None, b1=None, *,
+                  activation="relu", final_activation=None, schedule=None,
+                  plan=None, interpret: bool = True):
+    """Two-layer GCN — ``Ã act(Ã (x @ w0) + b0) @ w1 [+ b1]`` — built as
+    a ``repro.fuse`` chain and executed by the fusion planner: the
+    activations/biases fold into their producing SpMM's epilogue, so the
+    whole model is **2 Pallas launches** (DESIGN.md §10).
+
+    ``plan`` overrides the greedy plan (e.g. a
+    :func:`repro.fuse.tuned_plan` replay or an explicit split for A/B
+    timing); ``schedule`` rides on both SpMM anchors (``None`` →
+    per-matrix auto selection).  Differentiable in ``x``/weights/biases
+    through the planned launches' custom VJPs."""
+    from ..fuse import gcn_chain
+    from ..fuse import plan as plan_chain
+    from ..fuse import run_plan
+
+    chain, params = gcn_chain(adj, (w0, w1), (b0, b1),
+                              activation=activation,
+                              final_activation=final_activation,
+                              schedule=schedule)
+    p = plan_chain(chain) if plan is None else plan
+    return run_plan(p, x, params, interpret=interpret)
+
+
 # ---------------------------------------------------------------- linear
 
 

@@ -60,12 +60,14 @@ def _capacity(cfg, t_local: int, factor: float | None = None) -> int:
 
 
 def _expert_ffn(cfg, x, wg, wi, wo, gates, capacity, use_pallas,
-                dispatch=None):
+                dispatch=None, combine: str = "sum"):
     """Local computation: x (T, D) tokens; wg/wi/wo (E_loc, D, F)/(E_loc, F,
     D); gates (T, E_loc) combine weights (0 when not routed). Returns the
     partial output (T, D) for these experts.  ``dispatch`` (a
     ``repro.tune.MoeDispatchSchedule``) overrides the static tile
-    defaults of the Pallas path; ``None`` keeps them."""
+    defaults of the Pallas path; ``None`` keeps them.  ``combine`` is
+    the gate-weighted writeback monoid ('sum' / 'min' / 'mean' —
+    ``repro.fuse.moe_combine``)."""
     t, d = x.shape
     e_loc = wg.shape[0]
     # per-expert capacity selection: top-C tokens by gate weight. Tokens
@@ -75,7 +77,9 @@ def _expert_ffn(cfg, x, wg, wi, wo, gates, capacity, use_pallas,
     xg = jnp.take(x, topi.reshape(-1), axis=0).reshape(e_loc, capacity, d)
 
     if use_pallas:
-        from ..kernels.grouped_matmul import fit_tile, grouped_matmul
+        from ..core.schedule import Epilogue
+        from ..kernels.grouped_matmul import fit_tile
+        from ..kernels.ops import grouped_matmul
 
         f = wg.shape[-1]
         tt = dispatch.token_tile if dispatch is not None else 128
@@ -90,14 +94,20 @@ def _expert_ffn(cfg, x, wg, wi, wo, gates, capacity, use_pallas,
                                   tiles_per_e)
         flat = xg.reshape(e_loc * cap_pad, d)
 
-        def gmm(x_, w_, contract_tile, out_tile):
+        def gmm(x_, w_, contract_tile, out_tile, epilogue=Epilogue()):
             return grouped_matmul(x_, tile_experts, w_, token_tile=tile,
-                                  d_tile=contract_tile, f_tile=out_tile)
+                                  d_tile=contract_tile, f_tile=out_tile,
+                                  epilogue=epilogue)
 
         # the up-projections contract D and emit F; the down-projection
         # contracts F and emits D — tiles are passed per role, never
-        # inferred from shapes (d == f would make that ambiguous)
-        h = jax.nn.silu(gmm(flat, wg, dt, ft)) * gmm(flat, wi, dt, ft)
+        # inferred from shapes (d == f would make that ambiguous).  The
+        # gate projection's SiLU is fused onto the GEMM's output block
+        # (the repro.fuse grouped_matmul→ewise chain, pre-planned): one
+        # launch per tile instead of a GEMM pass + an XLA silu pass.
+        h = gmm(flat, wg, dt, ft,
+                epilogue=Epilogue(activation="silu")) * gmm(flat, wi,
+                                                            dt, ft)
         y = gmm(h.astype(x.dtype), wo, ft, dt)
         y = y.reshape(e_loc, cap_pad, d)[:, :capacity]
     else:
@@ -105,10 +115,10 @@ def _expert_ffn(cfg, x, wg, wi, wo, gates, capacity, use_pallas,
             "ecd,edf->ecf", xg, wi)
         y = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), wo)
 
-    y = y.astype(jnp.float32) * topv[..., None]
-    out = jnp.zeros((t, d), jnp.float32)
-    out = out.at[topi.reshape(-1)].add(y.reshape(-1, d))
-    return out
+    from ..fuse.execute import moe_combine
+
+    return moe_combine(y.reshape(-1, d), topi.reshape(-1),
+                       topv.reshape(-1), t, op=combine)
 
 
 def _route(cfg, x, router):
@@ -131,12 +141,17 @@ def _aux_loss(cfg, gates, probs):
 
 
 def apply_moe(cfg, p, x2d, ctx: ShardingCtx | None = None, *,
-              dispatch=None):
+              dispatch=None, combine: str = "sum"):
     """x2d: (T, D) tokens (sharded over data axes under ctx). Returns
     (out (T, D), aux_loss scalar).  ``dispatch`` (a
     ``repro.tune.MoeDispatchSchedule``, e.g. from
     :func:`moe_tune_dispatch`) replaces the static token-tile/capacity
-    defaults; ``None`` keeps the config's static choice."""
+    defaults; ``None`` keeps the config's static choice.  ``combine``
+    picks the expert→token writeback monoid ('sum' default; 'min' /
+    'mean' run the same gate-weighted scatter under those monoids —
+    ``repro.fuse.moe_combine``).  Non-additive combines are single-shard
+    only: the expert-parallel psum writeback composes additive partials
+    and cannot carry a min/mean across shards."""
     use_pallas = cfg.moe_pallas_dispatch
     cap_factor = dispatch.capacity_factor if dispatch is not None else None
 
@@ -144,8 +159,14 @@ def apply_moe(cfg, p, x2d, ctx: ShardingCtx | None = None, *,
         gates, probs = _route(cfg, x2d, p["router"])
         cap = _capacity(cfg, x2d.shape[0], cap_factor)
         out = _expert_ffn(cfg, x2d, p["wg"], p["wi"], p["wo"], gates, cap,
-                          use_pallas, dispatch)
+                          use_pallas, dispatch, combine)
         return out.astype(x2d.dtype), _aux_loss(cfg, gates, probs)
+
+    if combine != "sum":
+        raise ValueError(
+            f"combine={combine!r} requires single-shard execution: the "
+            "expert-parallel psum writeback only composes additive "
+            "partials")
 
     mesh = ctx.mesh
     dax, max_ = ctx.data_axes, ctx.model_axis

@@ -9,7 +9,9 @@ accept ``schedule=`` as a name ('EB+PR', ...), a
 choice" made a library default); the other ops have no matrix to derive
 statistics from, so ``'auto'`` raises there.
 
-Fusion surface (DESIGN.md §8):
+Fusion surface (DESIGN.md §8; *planned* multi-op fusion lives in
+``repro.fuse`` — DESIGN.md §10 — which lowers chain nodes onto these
+ops' epilogue slots rather than callers picking per-op):
 
 * ``spmm(..., bias=, residual=, epilogue=)`` fuses the dense epilogue of
   a GCN-style layer (``act(A @ XW + b) [+ res]``) into the kernel's last

@@ -159,16 +159,18 @@ def default_cache_path(namespace: str | None = None) -> pathlib.Path:
 
 @dataclasses.dataclass(frozen=True)
 class TuneRecord:
-    """One cached tuning outcome.  ``schedule`` is either a
-    :class:`~repro.core.Schedule` (SpMM / segment-reduce records) or a
+    """One cached tuning outcome.  ``schedule`` is a
+    :class:`~repro.core.Schedule` (SpMM / segment-reduce records), a
     :class:`~repro.tune.moe.MoeDispatchSchedule` (``moe:``-prefixed
-    records); serialization dispatches on a ``kind`` tag."""
+    records), or a :class:`~repro.fuse.FuseDecision` (``fuse:``-prefixed
+    planner records); serialization dispatches on a ``kind`` tag."""
 
     schedule: object
     us_per_call: float
     measured: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
+        from ..fuse.ir import FuseDecision
         from .moe import MoeDispatchSchedule
 
         d = {
@@ -178,10 +180,14 @@ class TuneRecord:
         }
         if isinstance(self.schedule, MoeDispatchSchedule):
             d["kind"] = "moe"
+        elif isinstance(self.schedule, FuseDecision):
+            d["kind"] = "fuse"
+            d["schedule"] = {"fused": list(self.schedule.fused)}
         elif not isinstance(self.schedule, Schedule):
             raise TypeError(
                 f"unserializable schedule type {type(self.schedule).__name__}"
-                " (known kinds: Schedule, MoeDispatchSchedule)")
+                " (known kinds: Schedule, MoeDispatchSchedule, "
+                "FuseDecision)")
         return d
 
     @staticmethod
@@ -190,6 +196,11 @@ class TuneRecord:
             from .moe import MoeDispatchSchedule
 
             sched = MoeDispatchSchedule(**d["schedule"])
+        elif d.get("kind") == "fuse":
+            from ..fuse.ir import FuseDecision
+
+            sched = FuseDecision(fused=tuple(bool(b)
+                                             for b in d["schedule"]["fused"]))
         else:
             sched = Schedule(**d["schedule"])
         return TuneRecord(schedule=sched,
