@@ -381,3 +381,50 @@ def selector_quality(quick=True):
                  f"auto_vs_oracle_geomean={geomean(auto_vs_oracle):.3f},"
                  f"tuned_vs_oracle_geomean={geomean(tuned_vs_oracle):.3f}"))
     return rows
+
+
+def skew_tuner_gap(quick=True):
+    """Skew-aware two-level scheduling on power-law graphs (ISSUE 7).
+
+    For each power-law / graph-pattern matrix, ``tune_schedule`` searches
+    the full space *including* the split/merge thresholds (DESIGN.md
+    §11) against a memory-only cache; the best *static* point is the
+    fastest schedule in the same run's measured pool that carries no
+    skew thresholds.  Tuned and static timings come from one ``_Memo``
+    sweep, so the win ratio compares like with like — and since the
+    tuner picks the measured minimum, the geomean is >= 1.0 whenever a
+    skew point wins anywhere and == 1.0 where the plain layout is
+    already optimal (the 'roadnet' control row should sit at ~1.0).
+    """
+    import re as _re
+
+    from repro.sparse.random import graph_pattern_csr, power_law_csr
+    from repro.tune import ScheduleCache, tune_schedule
+
+    n = 1024 if quick else 4096
+    n_dense = 4
+    mats = [("powerlaw", power_law_csr(n, n, avg_degree=8.0, alpha=1.8,
+                                       seed=0))]
+    mats += [(p, graph_pattern_csr(p, n, seed=1))
+             for p in ("web", "social", "roadnet")]
+
+    cache = ScheduleCache(path=None)  # never touch the user's cache
+    rows, wins = [], []
+    for name, csr in mats:
+        res = tune_schedule(csr, n_dense, cache=cache, warmup=1, iters=3)
+        # skew points carry ':s<split>:m<merge>' in their schedule_key
+        # (':segment' has no digit after ':s', so it doesn't match)
+        static = {k: v for k, v in res.measured.items()
+                  if not _re.search(r":s\d", k)}
+        t_static = min(static.values())
+        wins.append(t_static / max(res.us_per_call, 1e-9))
+        s = res.schedule
+        skew = (f"s{s.split_threshold}/m{s.merge_threshold}"
+                if s.is_skew else "plain")
+        rows.append((f"beyond/skew/{name}", res.us_per_call,
+                     f"tuned={s.kernel}/G{s.group_size}/{skew},"
+                     f"static_us={t_static:.1f},"
+                     f"tuned_vs_static={wins[-1]:.3f},nnz={csr.nnz}"))
+    rows.append(("beyond/skew_gap", 0.0,
+                 f"tuned_vs_static_geomean={geomean(wins):.3f}"))
+    return rows

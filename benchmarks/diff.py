@@ -6,7 +6,8 @@ Compares ``BENCH_<tag>.json`` artifacts (as written by
 past a threshold.  Signals checked:
 
 * **us_per_call geomeans** per row group (default groups: ``table5``,
-  ``beyond/fused_attention_bwd`` and ``beyond/fusion_planner``):
+  ``beyond/fused_attention_bwd``, ``beyond/fusion_planner`` and
+  ``beyond/skew``):
   geomean over the names both artifacts share.  When both artifacts
   carry the ``probe/runner_speed`` row (a fixed dense-matmul timing
   baked into every artifact), the geomeans are **normalized by the
@@ -17,7 +18,8 @@ past a threshold.  Signals checked:
 * **derived geomean metrics** — ``derived`` fields carry
   ``<key>_geomean=<x>`` ratios.  Only the *win* ratios in
   ``GATED_GEOMEAN_KEYS`` (``tuned_vs_auto_geomean``,
-  ``tuned_vs_default_geomean`` — higher is better) gate, failing when
+  ``tuned_vs_default_geomean``, ``tuned_vs_static_geomean`` — higher is
+  better) gate, failing when
   ``new < old * (1 - threshold)``; other geomean keys are reported
   informationally but never fail — both the ``*_vs_oracle`` slowdown
   ratios (lower is better) and ``fused_vs_unfused_geomean`` (a win
@@ -50,12 +52,13 @@ import re
 import sys
 
 # groups whose probe-normalized us geomeans gate: table5 (the paper's
-# headline kernels), the fused attention backward (ISSUE 5), and the
-# fusion planner's fused chains (ISSUE 6).  A group's *first* appearance
-# in a trajectory has no shared rows and skips green; thereafter a
+# headline kernels), the fused attention backward (ISSUE 5), the
+# fusion planner's fused chains (ISSUE 6), and the skew-aware tuner on
+# power-law graphs (ISSUE 7).  A group's *first* appearance in a
+# trajectory has no shared rows and skips green; thereafter a
 # >threshold normalized slowdown fails.
 DEFAULT_GROUPS = ("table5", "beyond/fused_attention_bwd",
-                  "beyond/fusion_planner")
+                  "beyond/fusion_planner", "beyond/skew")
 DEFAULT_WINDOW = 5
 PROBE_ROW = "probe/runner_speed"
 TRAJECTORY_VERSION = 1
@@ -65,8 +68,12 @@ TRAJECTORY_VERSION = 1
 # auto_vs_oracle_geomean (a slowdown ratio where LOWER is better) and
 # fused_vs_unfused_geomean (a win ratio, but its two sides are multi-
 # second kernel timings measured sequentially, so its *magnitude* swings
-# ±40% under runner contention even though the >1 win itself is robust)
-GATED_GEOMEAN_KEYS = ("tuned_vs_auto_geomean", "tuned_vs_default_geomean")
+# ±40% under runner contention even though the >1 win itself is robust).
+# tuned_vs_static_geomean (beyond/skew) gates: tuned and static come
+# from one measured pool, so the ratio is load-robust like the other
+# within-run win ratios.
+GATED_GEOMEAN_KEYS = ("tuned_vs_auto_geomean", "tuned_vs_default_geomean",
+                      "tuned_vs_static_geomean")
 
 _GEOMEAN_RE = re.compile(r"([a-z0-9_/]*geomean)=([-+0-9.eE]+)")
 

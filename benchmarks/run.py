@@ -40,14 +40,39 @@ def runner_speed_probe():
     return [(PROBE_ROW, t * 1e6, "fixed 512x512 f32 matmul, iters=7")]
 
 
+#: The bench registry: group name -> (module, function).  ``--only``'s
+#: help text and the unknown-bench error are generated from this dict,
+#: so adding a bench here is the *single* registration step (the group
+#: lists in help/docstrings previously drifted — ISSUE 7 satellite).
+BENCHES = {
+    "table1": ("tables", "table1_group_size"),
+    "table2": ("tables", "table2_segment_vs_atomic"),
+    "table3": ("tables", "table3_new_vs_original"),
+    "table4": ("tables", "table4_tuning"),
+    "table5": ("tables", "table5_dynamic_choice"),
+    "moe": ("beyond", "moe_dispatch"),
+    "moe_tuner": ("beyond", "moe_tuner_gap"),
+    "selector": ("beyond", "selector_quality"),
+    "fused_attention": ("beyond", "fused_attention"),
+    "fused_attention_bwd": ("beyond", "fused_attention_bwd"),
+    "fusion_planner": ("beyond", "fusion_planner"),
+    "skew": ("beyond", "skew_tuner_gap"),
+}
+
+
+def bench_names() -> list:
+    """Registered bench group names, registry order (single source for
+    ``--only`` help, error messages, and callers like CI smoke)."""
+    return list(BENCHES)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="larger matrices (slower, closer to paper scale)")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table2,table3,table4,table5,"
-                         "moe,moe_tuner,selector,fused_attention,"
-                         "fused_attention_bwd,fusion_planner")
+                    help="comma list of bench groups: "
+                         + ",".join(bench_names()))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write {name: {us_per_call, derived}} JSON")
     args = ap.parse_args()
@@ -55,18 +80,11 @@ def main() -> None:
 
     from . import beyond, tables
 
+    modules = {"tables": tables, "beyond": beyond}
     benches = {
-        "table1": lambda: tables.table1_group_size(quick),
-        "table2": lambda: tables.table2_segment_vs_atomic(quick),
-        "table3": lambda: tables.table3_new_vs_original(quick),
-        "table4": lambda: tables.table4_tuning(quick),
-        "table5": lambda: tables.table5_dynamic_choice(quick),
-        "moe": lambda: beyond.moe_dispatch(quick),
-        "moe_tuner": lambda: beyond.moe_tuner_gap(quick),
-        "selector": lambda: beyond.selector_quality(quick),
-        "fused_attention": lambda: beyond.fused_attention(quick),
-        "fused_attention_bwd": lambda: beyond.fused_attention_bwd(quick),
-        "fusion_planner": lambda: beyond.fusion_planner(quick),
+        name: (lambda mod, fn: lambda: getattr(modules[mod], fn)(quick))(
+            mod, fn)
+        for name, (mod, fn) in BENCHES.items()
     }
     wanted = args.only.split(",") if args.only else list(benches)
     unknown = [w for w in wanted if w not in benches]

@@ -76,6 +76,9 @@ class AtomicParallelism:
 
 
 def is_legal(p: AtomicParallelism) -> bool:
+    """Whether the parallelism point satisfies the paper's legality
+    rules (no fractional nnz; row collaboration covered by the sync
+    width) — the filter ``enumerate_legal`` applies to the raw grid."""
     # Rule 1: no fractional nnz.
     if p.split == "nnz" and p.x < 1:
         return False

@@ -166,6 +166,9 @@ def attach_pallas_impl(name: str, pallas_fn: Callable) -> ReductionStrategy:
 
 
 def get_strategy(strategy, op=None) -> ReductionStrategy:
+    """Resolve a strategy name/enum/entry to its registry record,
+    specialized to monoid ``op`` when given (raises on unknown names —
+    the schedule/cache layers rely on names being stable identities)."""
     name = strategy_name(strategy)
     try:
         entry = _REGISTRY[name]
@@ -221,6 +224,8 @@ def call_pallas_fn(pallas_fn: Callable, rows, partial, out_ref,
 
 
 def available_strategies() -> Tuple[str, ...]:
+    """Registered reduction-strategy names, sorted (built-ins plus any
+    ``register_strategy`` extensions)."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -320,6 +325,8 @@ class Epilogue:
 
     @property
     def is_noop(self) -> bool:
+        """True when no epilogue work is attached (kernels then skip the
+        epilogue step entirely; a no-op epilogue hashes/keys as '')."""
         return not (self.activation or self.bias or self.residual
                     or self.out_dtype)
 
@@ -407,6 +414,17 @@ class Schedule:
                 'parallel', 'accumulate', or user-registered).
     epilogue    fused post-reduction work (:class:`Epilogue`); the no-op
                 default keeps plain schedules unchanged.
+
+    split_threshold / merge_threshold (DESIGN.md §11, 'eb' only) select
+    the two-level skew partition: rows with at least ``split_threshold``
+    nonzeros are split across dedicated groups (reduced 'parallel'
+    per-group, partials combined by the registry's accumulate-style
+    read-modify-write) and tail rows with at most ``merge_threshold``
+    nonzeros are merged into shared groups (longer tail rows get
+    group-aligned).  ``None`` (the default) keeps the standard
+    single-level layout; the empirical tuner searches the thresholds per
+    matrix fingerprint alongside group size, and cached records replay
+    them measurement-free.
     """
 
     kernel: str = "eb"
@@ -416,6 +434,8 @@ class Schedule:
     group_size: int = 32
     strategy: str = "segment"
     epilogue: Epilogue = Epilogue()
+    split_threshold: Optional[int] = None
+    merge_threshold: Optional[int] = None
 
     def __post_init__(self):
         if self.kernel not in ("eb", "rb"):
@@ -428,6 +448,29 @@ class Schedule:
             object.__setattr__(self, "epilogue", Epilogue(**self.epilogue))
         if self.kernel == "eb" and self.nnz_tile % self.group_size != 0:
             raise ValueError("nnz_tile must be a multiple of group_size")
+        if self.split_threshold is not None or self.merge_threshold is not None:
+            if self.kernel != "eb":
+                raise ValueError(
+                    "split/merge thresholds are an 'eb' (nnz-split) "
+                    "feature: the rb kernel owns whole rows per cell and "
+                    "has no group partition to rebalance")
+            if self.split_threshold is not None and self.split_threshold < 1:
+                raise ValueError("split_threshold must be >= 1")
+            if self.merge_threshold is not None and self.merge_threshold < 0:
+                raise ValueError("merge_threshold must be >= 0")
+            if (self.split_threshold is not None
+                    and self.merge_threshold is not None
+                    and self.merge_threshold > self.split_threshold):
+                raise ValueError(
+                    f"merge_threshold ({self.merge_threshold}) must not "
+                    f"exceed split_threshold ({self.split_threshold}): a "
+                    "row cannot be both merged and split")
+
+    @property
+    def is_skew(self) -> bool:
+        """Whether this schedule carries a two-level skew partition."""
+        return (self.split_threshold is not None
+                or self.merge_threshold is not None)
 
     # -- constructors ------------------------------------------------------
 
@@ -518,6 +561,9 @@ class Schedule:
         return SegmentGroup(group_size=self.group_size, strategy=self.strategy)
 
     def replace(self, **kw) -> "Schedule":
+        """``dataclasses.replace`` shorthand — the tuner's hillclimb
+        moves are built from this (validation re-runs, so an illegal
+        move raises ``ValueError`` rather than producing a bad point)."""
         return dataclasses.replace(self, **kw)
 
     def with_epilogue(self, activation: Optional[str] = None, *,
@@ -533,8 +579,11 @@ class Schedule:
                 else f"row_tile={self.row_tile}")
         ep = ("" if self.epilogue.is_noop
               else f", epilogue={self.epilogue.tag}")
+        sk = ("" if not self.is_skew
+              else f", split>={self.split_threshold}"
+                   f"/merge<={self.merge_threshold}")
         return (f"Schedule({self.kernel}, {tile}, col_tile={self.col_tile}, "
-                f"G={self.group_size}, strategy={self.strategy}{ep})")
+                f"G={self.group_size}, strategy={self.strategy}{sk}{ep})")
 
 
 def _lcm_tile(tile: int, group: int) -> int:

@@ -125,6 +125,8 @@ def get_monoid(op) -> Monoid:
 
 
 def available_monoids():
+    """Registered reduction-op names (sum/max/min/... plus
+    ``make_monoid`` extensions), sorted."""
     return tuple(sorted(set(MONOIDS)))
 
 
@@ -134,20 +136,23 @@ def make_monoid(name: str, combine: Callable, identity: float) -> Monoid:
     derived generically (spec-grade: the segment reduce materializes an
     (S, T, C) mask product, fine for oracles, not for hot paths)."""
 
-    def reduce(x, axis):
+    def _reduce(x, axis):
         return jax.lax.reduce(x, jnp.asarray(identity, x.dtype),
                               lambda a, b: combine(a, b), (axis,))
 
-    def seg_reduce(data, seg_ids, num_segments):
+    def _seg_reduce(data, seg_ids, num_segments):
         mask = seg_ids[None, :] == jnp.arange(num_segments)[:, None]
         expanded = jnp.where(mask[..., None], data[None], identity)
-        return reduce(expanded, 1)
+        return _reduce(expanded, 1)
 
     return Monoid(name=name, identity=float(identity), combine=combine,
-                  reduce=reduce, seg_reduce=seg_reduce)
+                  reduce=_reduce, seg_reduce=_seg_reduce)
 
 
 class GroupReduceStrategy(enum.Enum):
+    """The paper's three group-reduction realizations (Sgap §5): names
+    are the stable identities schedules and cache records carry."""
+
     SEGMENT = "segment"
     PARALLEL = "parallel"
     ACCUMULATE = "accumulate"

@@ -117,6 +117,9 @@ def cost_terms(stats: Dict, sched: Schedule,
         # ELL pads every row to row_max
         waste = (row_max * n_rows - nnz) * C
         writeback = n_rows * C
+    elif sched.is_skew and stats.get("row_quantiles"):
+        waste, writeback = _skew_terms(stats, sched, nnz, C, row_mean,
+                                       row_max)
     else:
         waste_frac = group_waste_fraction(
             [max(1, int(row_mean))], sched.group_size
@@ -128,6 +131,58 @@ def cost_terms(stats: Dict, sched: Schedule,
         writeback = (rows_touched + groups) * C
     gather = nnz * min(C, sched.col_tile)
     return (float(work), float(waste), float(writeback), float(gather))
+
+
+def _frac_rows_above(quantiles, thr: float) -> float:
+    """Approximate fraction of (non-empty) rows with length > ``thr`` by
+    piecewise-linear interpolation of the ``(percent, length)`` quantile
+    pairs from ``matrix_stats`` — the cost model's view of the histogram
+    the fingerprint hashes."""
+    pts = sorted(quantiles)
+    if not pts:
+        return 0.0
+    if thr < pts[0][1]:
+        return 1.0
+    if thr >= pts[-1][1]:
+        # beyond the top quantile: decay the top tail mass linearly
+        return max(0.0, (100 - pts[-1][0]) / 100.0 / 2.0)
+    for (p0, v0), (p1, v1) in zip(pts, pts[1:]):
+        if v0 <= thr < v1:
+            t = (thr - v0) / max(1e-9, v1 - v0)
+            return 1.0 - (p0 + t * (p1 - p0)) / 100.0
+    return 0.0
+
+
+def _skew_terms(stats: Dict, sched: Schedule, nnz: float, C: float,
+                row_mean: float, row_max: float) -> Tuple[float, float]:
+    """waste/writeback under the two-level skew layout (DESIGN.md §11):
+    the rebalanced histogram the thresholds produce, not the mean-row
+    approximation.
+
+    *Heavy* rows (length >= split) sit in dedicated groups padded to the
+    group width — at most G-1 pad lanes per row, plus one extra combine
+    writeback per heavy group.  *Merged* light rows (length <= merge)
+    pack with zero padding.  Mid rows align to a group boundary — on
+    average G/2 pad lanes each.
+    """
+    G = sched.group_size
+    rq = stats["row_quantiles"]
+    rows_touched = nnz / row_mean
+    split = sched.split_threshold or float("inf")
+    merge = sched.merge_threshold or 0
+    frac_heavy = (0.0 if split == float("inf")
+                  else _frac_rows_above(rq, split - 1))
+    frac_mid = max(0.0, _frac_rows_above(rq, merge) - frac_heavy)
+    heavy_rows = rows_touched * frac_heavy
+    mid_rows = rows_touched * frac_mid
+    # heavy nnz: mean heavy length approximated by the split/max midpoint
+    heavy_nnz = (min(nnz, heavy_rows * (min(split, row_max) + row_max) / 2.0)
+                 if heavy_rows > 0 else 0.0)
+    waste = (heavy_rows * (G - 1) + mid_rows * G / 2.0) * C
+    heavy_groups = (heavy_nnz + heavy_rows * (G - 1)) / G
+    tail_groups = max(0.0, nnz - heavy_nnz) / G
+    writeback = (rows_touched + heavy_groups + tail_groups) * C
+    return float(waste), float(writeback)
 
 
 def predict_cost(stats: Dict, sched: Schedule, n_dense_cols: int,

@@ -116,6 +116,8 @@ def grouped_matmul_node(*, epilogue: Epilogue = Epilogue(),
 
 def segment_reduce_node(op: str = "sum", *, schedule=None,
                         label: str = "") -> FuseNode:
+    """A grouped segment-reduce anchor under the named monoid, with an
+    optional explicit :class:`Schedule`."""
     sched = None if schedule is None else as_schedule(schedule)
     return FuseNode("segment_reduce", op=op, schedule=sched, label=label)
 
@@ -147,6 +149,7 @@ class FuseDecision:
 
     @property
     def tag(self) -> str:
+        """Compact chain signature: one F(used)/S(tandalone) per node."""
         return "".join("F" if b else "S" for b in self.fused) or "-"
 
 
@@ -163,6 +166,7 @@ class Launch:
 
     @property
     def is_pallas(self) -> bool:
+        """True when the anchor lowers to a Pallas kernel (fusible)."""
         return self.anchor.kind in PALLAS_KINDS
 
 

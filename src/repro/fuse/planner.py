@@ -44,7 +44,7 @@ def plan(chain, decision: Optional[FuseDecision] = None) -> FusePlan:
     epilogue = chain[0].epilogue
     members = [0]
 
-    def close():
+    def _close():
         launches.append(Launch(anchor=anchor, anchor_idx=anchor_idx,
                                epilogue=epilogue, members=tuple(members)))
 
@@ -60,14 +60,14 @@ def plan(chain, decision: Optional[FuseDecision] = None) -> FusePlan:
             fused_bits.append(True)
             reasons.append("")
         else:
-            close()
+            _close()
             anchor, anchor_idx = node, i
             epilogue = node.epilogue
             members = [i]
             fused_bits.append(False)
             reasons.append(reason if merged is None
                            else "split by decision")
-    close()
+    _close()
     return FusePlan(chain=chain, launches=tuple(launches),
                     decision=FuseDecision(tuple(fused_bits)),
                     reasons=tuple(reasons))

@@ -68,6 +68,7 @@ def unregister_rule(name: str) -> None:
 
 
 def available_rules() -> Tuple[str, ...]:
+    """Registered fusion-rule names, in application order."""
     return tuple(n for n, _ in _RULES)
 
 

@@ -124,18 +124,21 @@ def spmm(a, b, schedule: Schedule | None = None, *,
     n_pad = b_pad.shape[1]
 
     if schedule.kernel == "eb":
+        skew_kw = dict(group_size=schedule.group_size,
+                       split_threshold=schedule.split_threshold,
+                       merge_threshold=schedule.merge_threshold)
         if isinstance(a, CSR):
-            a = a.grouped(schedule.nnz_tile)
+            a = a.grouped(schedule.nnz_tile, **skew_kw)
         assert isinstance(a, GroupedCOO), type(a)
-        a = a.regrouped(schedule.nnz_tile)  # memoized; no-op on match
+        a = a.regrouped(schedule.nnz_tile, **skew_kw)  # memoized; no-op
         bias_p, res_p = _pad_epilogue_operands(ep, bias, residual,
                                                a.shape[0], n_pad)
         out = _spmm_eb(
             a.rows, a.cols, a.vals, b_pad, n_rows=a.shape[0],
             nnz_tile=schedule.nnz_tile, col_tile=col_tile,
             group_size=schedule.group_size, strategy=schedule.strategy,
-            epilogue=ep, bias=bias_p, residual=res_p,
-            interpret=interpret)
+            heavy_tiles=a.heavy_tiles, epilogue=ep, bias=bias_p,
+            residual=res_p, interpret=interpret)
         return out[:, :n]
 
     # rb path

@@ -37,8 +37,8 @@ _NOOP = Epilogue()
 
 
 def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, *refs,
-                    group_size: int, strategy: str, epilogue: Epilogue,
-                    narrowed: bool):
+                    group_size: int, strategy: str, heavy_tiles: int,
+                    epilogue: Epilogue, narrowed: bool):
     bias_ref, res_ref, out_ref, acc_ref = split_epilogue_refs(
         refs, epilogue, narrowed)
     # out_dtype narrowing: accumulate in the f32 scratch, cast only at
@@ -56,7 +56,21 @@ def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, *refs,
 
     gathered = jnp.take(b, cols, axis=0)  # (T, C)
     partial = gathered * vals[:, None]
-    group_reduce_scatter(rows, partial, acc, group_size, strategy)
+    if heavy_tiles > 0 and strategy != "parallel":
+        # two-level skew layout (DESIGN.md §11): the leading heavy tiles
+        # hold single-row groups, so they run the registry's 'parallel'
+        # realization — one plain reduce + one read-modify-write per
+        # group, the accumulate-style cross-group combine for split rows
+        @pl.when(pl.program_id(1) < heavy_tiles)
+        def _heavy():
+            group_reduce_scatter(rows, partial, acc, group_size,
+                                 "parallel")
+
+        @pl.when(pl.program_id(1) >= heavy_tiles)
+        def _tail():
+            group_reduce_scatter(rows, partial, acc, group_size, strategy)
+    else:
+        group_reduce_scatter(rows, partial, acc, group_size, strategy)
 
     if not epilogue.is_noop:
         @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
@@ -68,11 +82,12 @@ def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, *refs,
 @functools.partial(
     jax.jit,
     static_argnames=("n_rows", "nnz_tile", "col_tile", "group_size",
-                     "strategy", "epilogue", "interpret"),
+                     "strategy", "heavy_tiles", "epilogue", "interpret"),
 )
 def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
             col_tile: int = 128, group_size: int = 32,
-            strategy: str = "segment", epilogue: Epilogue = _NOOP,
+            strategy: str = "segment", heavy_tiles: int = 0,
+            epilogue: Epilogue = _NOOP,
             bias=None, residual=None, interpret: bool = True):
     """out (n_rows, N) = scatter-reduce over padded COO triplets × B,
     with the fused ``epilogue`` applied to each output block on its last
@@ -81,7 +96,10 @@ def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
 
     Inputs must be pre-padded: len(vals) % nnz_tile == 0 (see
     ``formats.GroupedCOO``) and b.shape[1] % col_tile == 0 (``ops.spmm``
-    does the column padding).
+    does the column padding).  ``heavy_tiles`` (static, from a skew
+    ``GroupedCOO``'s metadata) marks the leading nnz tiles whose groups
+    are single-row by construction: those run the 'parallel' realization
+    regardless of ``strategy`` (DESIGN.md §11).
     """
     nnz_pad = vals.shape[0]
     k, n = b.shape
@@ -114,7 +132,7 @@ def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
 
     kernel = functools.partial(
         _spmm_eb_kernel, group_size=group_size, strategy=strategy,
-        epilogue=epilogue, narrowed=narrowed)
+        heavy_tiles=heavy_tiles, epilogue=epilogue, narrowed=narrowed)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -1,6 +1,7 @@
 """repro.sparse — the single public sparse API.
 
-Formats (`CSR`, `COO`, `GroupedCOO`, `ELL`), generators (`random_csr`),
+Formats (`CSR`, `COO`, `GroupedCOO`, `ELL`), generators (`random_csr`,
+`power_law_csr`, `graph_pattern_csr`),
 the unified ops (`spmm`, `sddmm`, `segment_reduce`, `sparse_attention`,
 all taking ``schedule=``), and the scheduling surface re-exported from
 core (`Schedule`, `Epilogue`, `register_strategy`).
@@ -14,4 +15,11 @@ from ..core.schedule import (  # noqa: F401
 )
 from .formats import COO, CSR, ELL, GroupedCOO  # noqa: F401
 from .ops import sddmm, segment_reduce, sparse_attention, spmm  # noqa: F401
-from .random import matrix_stats, random_coo, random_csr  # noqa: F401
+from .random import (  # noqa: F401
+    GRAPH_PATTERNS,
+    graph_pattern_csr,
+    matrix_stats,
+    power_law_csr,
+    random_coo,
+    random_csr,
+)

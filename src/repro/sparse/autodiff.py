@@ -39,13 +39,13 @@ def make_spmm(rows, cols, n_rows: int, n_cols: int, *, impl: str = "ref",
         return ref.spmm_coo_ref(rows, cols, vals, b, n_rows)
 
     @jax.custom_vjp
-    def spmm_fn(vals, b):
+    def _spmm_fn(vals, b):
         return _fwd_impl(vals, b)
 
-    def fwd(vals, b):
+    def _fwd(vals, b):
         return _fwd_impl(vals, b), (vals, b)
 
-    def bwd(res, dout):
+    def _bwd(res, dout):
         vals, b = res
         # dA values: sampled dense-dense product at the sparsity pattern
         dvals = ref.sddmm_ref(rows, cols, dout, b).astype(vals.dtype)
@@ -53,5 +53,5 @@ def make_spmm(rows, cols, n_rows: int, n_cols: int, *, impl: str = "ref",
         db = ref.spmm_coo_ref(cols, rows, vals, dout, n_cols).astype(b.dtype)
         return dvals, db
 
-    spmm_fn.defvjp(fwd, bwd)
-    return spmm_fn
+    _spmm_fn.defvjp(_fwd, _bwd)
+    return _spmm_fn

@@ -20,6 +20,15 @@ metadata so they can cross ``jit`` boundaries.
 training loops that call ``spmm`` on the same matrix every step don't
 re-convert.  The cache only engages on concrete (non-traced) arrays; it is
 deliberately not part of the pytree, so transformed copies start cold.
+
+Skew-partitioned grouping (DESIGN.md §11): ``grouped`` / ``regrouped``
+accept ``group_size=`` plus ``split_threshold=`` / ``merge_threshold=``
+and emit a *two-level* layout for power-law matrices — heavy rows are
+split across dedicated width-G groups up front (combined across groups
+by the registry's accumulate-style read-modify-write), light rows are
+merged into shared groups behind them.  The layout is carried in the
+static ``skew`` metadata; each parameter combination is its own memo
+key, so a tuner sweeping thresholds converts each layout once.
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ __all__ = ["COO", "CSR", "GroupedCOO", "ELL", "round_up"]
 
 
 def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x`` (tile padding)."""
     return ((x + m - 1) // m) * m
 
 
@@ -70,6 +80,99 @@ def _csr_scatter_index(indptr):
     return row_ids, pos
 
 
+def _concrete_np(x, what: str):
+    """``np.asarray(x)`` with a readable error under a jit tracer — the
+    host-side skew layout pass needs concrete index arrays."""
+    if isinstance(x, jax.core.Tracer):
+        raise TypeError(
+            f"{what} requires concrete (non-traced) arrays: the two-level "
+            "skew layout is a host-side format pass — build the grouped "
+            "format outside jit (it is memoized, so once is enough)")
+    return np.asarray(x)
+
+
+def _skew_layout(indptr, indices, shape, nnz_tile: int,
+                 group_size: int, split_threshold: int | None,
+                 merge_threshold: int | None):
+    """Host-side two-level layout pass (DESIGN.md §11).
+
+    Returns ``(rows, cols, positions, heavy_tiles)`` numpy arrays:
+    a padded COO stream whose first ``heavy_tiles`` nnz tiles hold the
+    *heavy* rows (``length >= split_threshold``), each split across
+    dedicated width-``group_size`` groups padded with the row's own id —
+    so every heavy group is single-row and reduces with the registry's
+    'parallel' realization, cross-group partials combining through its
+    accumulate-style read-modify-write.  The remaining tiles hold the
+    tail: rows in row order, runs of light rows (``length <=
+    merge_threshold``) merged into shared groups, longer tail rows
+    aligned to a group boundary (padding the gap with the previous row's
+    id, val 0 — zero extension).  ``positions[t]`` is the padded slot of
+    original CSR lane ``t`` — values (which may be jit tracers) are
+    scattered through it by the caller, so only the *index* arrays need
+    to be concrete here.
+    """
+    assert nnz_tile % group_size == 0, (nnz_tile, group_size)
+    indptr = np.asarray(indptr).astype(np.int64)
+    indices = np.asarray(indices)
+    n_rows = shape[0]
+    lengths = indptr[1:] - indptr[:-1]
+    pad_row = n_rows - 1
+    G = group_size
+    S = np.iinfo(np.int64).max if split_threshold is None else split_threshold
+    M = np.iinfo(np.int64).max if merge_threshold is None else merge_threshold
+
+    heavy = lengths >= S
+    h_ids = np.nonzero(heavy)[0]
+    h_lens = lengths[h_ids]
+    h_pad = -(-h_lens // G) * G  # per-row round up to the group width
+    h_starts = np.concatenate([[0], np.cumsum(h_pad)])[:-1]
+    heavy_total = int(h_pad.sum())
+    heavy_region = round_up(heavy_total, nnz_tile) if heavy_total else 0
+
+    t_ids = np.nonzero(~heavy & (lengths > 0))[0]
+    t_starts = np.empty(len(t_ids), np.int64)
+    gaps = []  # (offset, pad lanes, filler row id) alignment gaps
+    off = 0
+    prev_row = 0
+    for i, r in enumerate(t_ids):
+        length = int(lengths[r])
+        if length > M and off % G:
+            pad = G - off % G
+            gaps.append((off, pad, prev_row))
+            off += pad
+        t_starts[i] = off
+        off += length
+        prev_row = int(r)
+    tail_region = round_up(off, nnz_tile) if off else 0
+
+    total = heavy_region + tail_region
+    if total == 0:
+        total = nnz_tile  # empty matrix: one all-pad tile (as fromcsr)
+    rows = np.full(total, pad_row, np.int32)
+    cols = np.zeros(total, np.int32)
+
+    starts = np.zeros(n_rows, np.int64)
+    starts[h_ids] = h_starts
+    starts[t_ids] = heavy_region + t_starts
+    row_ids, pos = _csr_scatter_index(indptr)
+    positions = (starts[row_ids] + pos).astype(np.int64)
+    rows[positions] = row_ids
+    cols[positions] = indices
+    # heavy per-row padding keeps the row's own id: every heavy group is
+    # single-row, so 'parallel' may reduce it with one writeback
+    spans = h_pad - h_lens
+    if spans.sum():
+        base = np.repeat(h_starts + h_lens, spans)
+        local = np.arange(int(spans.sum())) - np.repeat(
+            np.concatenate([[0], np.cumsum(spans)])[:-1], spans)
+        rows[base + local] = np.repeat(h_ids, spans)
+    for g_off, g_pad, filler in gaps:
+        rows[heavy_region + g_off: heavy_region + g_off + g_pad] = filler
+
+    return (rows, cols, positions.astype(np.int32),
+            heavy_region // nnz_tile)
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["rows", "cols", "vals"],
@@ -86,14 +189,17 @@ class COO:
 
     @property
     def nnz(self) -> int:
+        """Stored-triplet count."""
         return self.vals.shape[0]
 
     def todense(self) -> jax.Array:
+        """Scatter-add the triplets into a dense ``shape`` array."""
         out = jnp.zeros(self.shape, self.vals.dtype)
         return out.at[self.rows, self.cols].add(self.vals)
 
     @staticmethod
     def fromdense(mat) -> "COO":
+        """Dense array -> row-major-sorted COO of its nonzeros."""
         mat = np.asarray(mat)
         rows, cols = np.nonzero(mat)
         order = np.lexsort((cols, rows))
@@ -112,6 +218,10 @@ class COO:
 )
 @dataclasses.dataclass(frozen=True)
 class CSR:
+    """Compressed sparse row — the canonical input format.  Conversions
+    (``tocoo``/``grouped``/``ell``) are memoized per instance, so a
+    serving loop converts once however many calls reuse the matrix."""
+
     indptr: jax.Array  # (n_rows + 1,) int32
     indices: jax.Array  # (nnz,) int32 column ids
     vals: jax.Array  # (nnz,)
@@ -119,9 +229,12 @@ class CSR:
 
     @property
     def nnz(self) -> int:
+        """Stored-value count."""
         return self.vals.shape[0]
 
     def row_lengths(self) -> jax.Array:
+        """(n_rows,) per-row nnz counts — the histogram the fingerprint
+        and the skew thresholds are derived from."""
         return self.indptr[1:] - self.indptr[:-1]
 
     # -- conversion caching ------------------------------------------------
@@ -131,9 +244,9 @@ class CSR:
                          key, build)
 
     def tocoo(self) -> "COO":
-        # expand indptr -> per-nnz row ids (format-time searchsorted: this
-        # replaces the paper's per-thread taco_binarySearchBefore).
-        def build():
+        """Memoized CSR -> COO expansion (format-time searchsorted
+        replaces the paper's per-thread taco_binarySearchBefore)."""
+        def _build():
             rows = jnp.searchsorted(
                 self.indptr, jnp.arange(self.nnz, dtype=jnp.int32),
                 side="right",
@@ -141,12 +254,31 @@ class CSR:
             return COO(rows=rows, cols=self.indices, vals=self.vals,
                        shape=self.shape)
 
-        return self._cached("coo", build)
+        return self._cached("coo", _build)
 
-    def grouped(self, nnz_tile: int) -> "GroupedCOO":
-        """EB-kernel feed format, memoized per nnz_tile."""
-        return self._cached(("grouped", nnz_tile),
-                            lambda: GroupedCOO.fromcsr(self, nnz_tile))
+    def grouped(self, nnz_tile: int, *, group_size: int | None = None,
+                split_threshold: int | None = None,
+                merge_threshold: int | None = None) -> "GroupedCOO":
+        """EB-kernel feed format, memoized per parameter tuple.
+
+        With ``split_threshold`` / ``merge_threshold`` set (and the
+        schedule's ``group_size``), the conversion runs the two-level
+        skew layout (:func:`_skew_layout`): heavy rows split across
+        dedicated groups up front, light rows merged into shared groups
+        behind.  Each distinct ``(nnz_tile, group_size, split, merge)``
+        is its own cache entry, so a tuner sweeping thresholds converts
+        each layout exactly once per matrix.
+        """
+        if split_threshold is None and merge_threshold is None:
+            return self._cached(("grouped", nnz_tile),
+                                lambda: GroupedCOO.fromcsr(self, nnz_tile))
+        key = ("grouped", nnz_tile, group_size, split_threshold,
+               merge_threshold)
+        return self._cached(
+            key, lambda: GroupedCOO.fromcsr(
+                self, nnz_tile, group_size=group_size,
+                split_threshold=split_threshold,
+                merge_threshold=merge_threshold))
 
     def ell(self, row_tile: int = 8, width: int | None = None) -> "ELL":
         """RB-kernel feed format, memoized per (row_tile, width)."""
@@ -159,18 +291,20 @@ class CSR:
         stream into the ELL (row, slot) layout — lets callers rebuild
         ``ELL.vals`` from fresh values (e.g. inside autodiff) without a
         Python loop.  Requires concrete arrays."""
-        def build():
+        def _build():
             row_ids, pos = _csr_scatter_index(self.indptr)
             return (jnp.asarray(row_ids, jnp.int32),
                     jnp.asarray(pos, jnp.int32))
 
-        return self._cached("ell_scatter", build)
+        return self._cached("ell_scatter", _build)
 
     def todense(self) -> jax.Array:
+        """Dense (n_rows, n_cols) array of this matrix."""
         return self.tocoo().todense()
 
     @staticmethod
     def fromdense(mat) -> "CSR":
+        """Dense array -> CSR of its nonzeros (host-side numpy pass)."""
         mat = np.asarray(mat)
         # np.nonzero is C-ordered: already sorted by (row, col).
         rows, cols = np.nonzero(mat)
@@ -185,6 +319,7 @@ class CSR:
 
     @staticmethod
     def fromcoo(coo: COO) -> "CSR":
+        """COO (any order) -> row-major CSR (host-side numpy sort)."""
         rows = np.asarray(coo.rows)
         cols = np.asarray(coo.cols)
         vals = np.asarray(coo.vals)
@@ -203,7 +338,7 @@ class CSR:
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["rows", "cols", "vals"],
-    meta_fields=["shape", "nnz", "nnz_tile"],
+    meta_fields=["shape", "nnz", "nnz_tile", "skew"],
 )
 @dataclasses.dataclass(frozen=True)
 class GroupedCOO:
@@ -211,8 +346,17 @@ class GroupedCOO:
 
     Feed format for the nnz-split segment-group kernel: a grid cell owns one
     ``nnz_tile`` slice; ``rows`` is the precomputed per-nnz row-id stream.
-    Padded lanes have ``val == 0`` and ``row == shape[0] - 1`` (zero
-    extension — they reduce into a live row but contribute nothing).
+    Padded lanes have ``val == 0`` (zero extension — they reduce into a
+    live row but contribute nothing); trailing padding targets row
+    ``shape[0] - 1``.
+
+    ``skew`` is ``None`` for the standard trailing-padded layout, or the
+    static tuple ``(split_threshold, merge_threshold, group_size,
+    heavy_tiles)`` for the two-level layout (:func:`_skew_layout`): the
+    first ``heavy_tiles`` nnz tiles hold split heavy rows (single-row
+    groups), the rest the merged tail.  Skew layouts interleave padding
+    with data, so value updates must go through :meth:`skew_positions`
+    rather than slicing ``vals[:nnz]``.
     """
 
     rows: jax.Array  # (nnz_padded,) int32, non-decreasing
@@ -221,56 +365,158 @@ class GroupedCOO:
     shape: tuple
     nnz: int  # true nnz (static)
     nnz_tile: int
+    skew: "tuple | None" = None
 
     @property
     def nnz_padded(self) -> int:
+        """Total lane count including padding (a ``nnz_tile`` multiple)."""
         return self.vals.shape[0]
 
     @property
     def num_tiles(self) -> int:
+        """Grid extent along the nnz axis: ``nnz_padded / nnz_tile``."""
         return self.nnz_padded // self.nnz_tile
 
+    @property
+    def heavy_tiles(self) -> int:
+        """Leading nnz tiles holding split heavy rows (0 for the standard
+        layout) — the EB kernel runs these under the 'parallel'
+        realization regardless of the schedule's tail strategy."""
+        return self.skew[3] if self.skew is not None else 0
+
+    def skew_positions(self) -> jax.Array:
+        """(nnz,) int32 scatter index: padded slot of original CSR lane t.
+
+        Only skew layouts carry one (standard layouts are trailing-padded,
+        so ``[:nnz]`` slicing suffices); it lets autodiff rebuild
+        ``vals`` from a fresh value stream without re-running the layout
+        pass.  Lost on pytree-transformed copies — rebuild the format
+        from its source CSR in that case."""
+        pos = self.__dict__.get("_skew_positions")
+        if pos is None:
+            raise ValueError(
+                "this GroupedCOO carries no skew scatter index (standard "
+                "layout, or a transformed copy); rebuild it via "
+                "CSR.grouped(..., split_threshold=...)")
+        return pos
+
     @staticmethod
-    def fromcsr(csr: CSR, nnz_tile: int) -> "GroupedCOO":
-        coo = csr.tocoo()
-        nnz = csr.nnz
-        padded = max(round_up(max(nnz, 1), nnz_tile), nnz_tile)
-        pad = padded - nnz
-        pad_row = csr.shape[0] - 1
-        rows = jnp.concatenate(
-            [coo.rows, jnp.full((pad,), pad_row, jnp.int32)])
-        cols = jnp.concatenate([coo.cols, jnp.zeros((pad,), jnp.int32)])
-        vals = jnp.concatenate([coo.vals, jnp.zeros((pad,), coo.vals.dtype)])
-        return GroupedCOO(rows=rows, cols=cols, vals=vals, shape=csr.shape,
-                          nnz=nnz, nnz_tile=nnz_tile)
+    def fromcsr(csr: CSR, nnz_tile: int, *, group_size: int | None = None,
+                split_threshold: int | None = None,
+                merge_threshold: int | None = None) -> "GroupedCOO":
+        """Convert a CSR; thresholds select the two-level skew layout.
 
-    def regrouped(self, nnz_tile: int) -> "GroupedCOO":
-        """This GroupedCOO re-padded to a different tile size, memoized
-        per target tile (the same per-``(format, tile)`` conversion cache
-        ``CSR`` has) — a serving loop whose tuned ``nnz_tile`` differs
-        from the feed's converts once, not per call."""
-        if nnz_tile == self.nnz_tile:
-            return self
-
-        def build():
-            nnz = self.nnz
+        The skew path is a host-side numpy pass over concrete index
+        arrays (it raises under jit tracers — convert outside jit; the
+        per-instance memo on ``CSR.grouped`` makes that a one-time
+        cost)."""
+        if split_threshold is None and merge_threshold is None:
+            coo = csr.tocoo()
+            nnz = csr.nnz
             padded = max(round_up(max(nnz, 1), nnz_tile), nnz_tile)
             pad = padded - nnz
-            return GroupedCOO(
-                rows=jnp.concatenate(
-                    [self.rows[:nnz],
-                     jnp.full((pad,), self.shape[0] - 1, jnp.int32)]),
-                cols=jnp.concatenate(
-                    [self.cols[:nnz], jnp.zeros((pad,), jnp.int32)]),
-                vals=jnp.concatenate(
-                    [self.vals[:nnz],
-                     jnp.zeros((pad,), self.vals.dtype)]),
-                shape=self.shape, nnz=nnz, nnz_tile=nnz_tile)
+            pad_row = csr.shape[0] - 1
+            rows = jnp.concatenate(
+                [coo.rows, jnp.full((pad,), pad_row, jnp.int32)])
+            cols = jnp.concatenate([coo.cols, jnp.zeros((pad,), jnp.int32)])
+            vals = jnp.concatenate(
+                [coo.vals, jnp.zeros((pad,), coo.vals.dtype)])
+            return GroupedCOO(rows=rows, cols=cols, vals=vals,
+                              shape=csr.shape, nnz=nnz, nnz_tile=nnz_tile)
+        if group_size is None:
+            raise ValueError(
+                "skew grouping needs the schedule's group_size= (heavy "
+                "rows are split at group granularity)")
+        indptr = _concrete_np(csr.indptr, "skew grouping")
+        rows, cols, pos, heavy_tiles = _skew_layout(
+            indptr, _concrete_np(csr.indices, "skew grouping"),
+            csr.shape, nnz_tile, group_size, split_threshold,
+            merge_threshold)
+        pos_j = jnp.asarray(pos)
+        vals = jnp.zeros((rows.shape[0],),
+                         csr.vals.dtype).at[pos_j].set(csr.vals)
+        g = GroupedCOO(
+            rows=jnp.asarray(rows), cols=jnp.asarray(cols),
+            vals=vals, shape=csr.shape, nnz=csr.nnz,
+            nnz_tile=nnz_tile,
+            skew=(split_threshold, merge_threshold, group_size,
+                  heavy_tiles))
+        object.__setattr__(g, "_skew_positions", pos_j)
+        return g
+
+    def _compact(self):
+        """(rows, cols, vals) original-order unpadded triplet views —
+        ``[:nnz]`` slices for the trailing-padded layout, a
+        :meth:`skew_positions` gather for skew layouts."""
+        if self.skew is None:
+            return (self.rows[: self.nnz], self.cols[: self.nnz],
+                    self.vals[: self.nnz])
+        pos = self.skew_positions()
+        return self.rows[pos], self.cols[pos], self.vals[pos]
+
+    def regrouped(self, nnz_tile: int, *, group_size: int | None = None,
+                  split_threshold: int | None = None,
+                  merge_threshold: int | None = None) -> "GroupedCOO":
+        """This GroupedCOO re-laid-out for a different tile size and/or
+        skew partition, memoized per ``(nnz_tile, group_size, split,
+        merge)`` target (the same per-``(format, tile)`` conversion
+        cache ``CSR`` has) — a serving loop whose tuned schedule differs
+        from the feed's converts once, not per call.  A matching target
+        (including a matching skew tuple) returns ``self`` unchanged."""
+        want_skew = (split_threshold is not None
+                     or merge_threshold is not None)
+        if want_skew and group_size is None:
+            raise ValueError(
+                "skew regrouping needs the schedule's group_size=")
+        if nnz_tile == self.nnz_tile:
+            if not want_skew and self.skew is None:
+                return self
+            if (want_skew and self.skew is not None
+                    and self.skew[:3] == (split_threshold, merge_threshold,
+                                          group_size)):
+                return self
+
+        def _build():
+            rows_c, cols_c, vals_c = self._compact()
+            if not want_skew:
+                nnz = self.nnz
+                padded = max(round_up(max(nnz, 1), nnz_tile), nnz_tile)
+                pad = padded - nnz
+                return GroupedCOO(
+                    rows=jnp.concatenate(
+                        [rows_c,
+                         jnp.full((pad,), self.shape[0] - 1, jnp.int32)]),
+                    cols=jnp.concatenate(
+                        [cols_c, jnp.zeros((pad,), jnp.int32)]),
+                    vals=jnp.concatenate(
+                        [vals_c, jnp.zeros((pad,), self.vals.dtype)]),
+                    shape=self.shape, nnz=nnz, nnz_tile=nnz_tile)
+            rows_np = _concrete_np(rows_c, "skew regrouping")
+            lengths = np.bincount(rows_np, minlength=self.shape[0])
+            indptr = np.concatenate([[0], np.cumsum(lengths)])
+            rows, cols, pos, heavy_tiles = _skew_layout(
+                indptr, _concrete_np(cols_c, "skew regrouping"),
+                self.shape, nnz_tile, group_size, split_threshold,
+                merge_threshold)
+            pos_j = jnp.asarray(pos)
+            vals = jnp.zeros((rows.shape[0],),
+                             self.vals.dtype).at[pos_j].set(vals_c)
+            g = GroupedCOO(
+                rows=jnp.asarray(rows), cols=jnp.asarray(cols),
+                vals=vals, shape=self.shape, nnz=self.nnz,
+                nnz_tile=nnz_tile,
+                skew=(split_threshold, merge_threshold, group_size,
+                      heavy_tiles))
+            object.__setattr__(g, "_skew_positions", pos_j)
+            return g
 
         return _memoized(self, (self.rows, self.cols, self.vals),
-                         ("regrouped", nnz_tile), build)
+                         ("regrouped", nnz_tile, group_size,
+                          split_threshold, merge_threshold), _build)
 
     def todense(self) -> jax.Array:
+        """Scatter-add the (padded) triplets into a dense array — padded
+        lanes contribute zero by the zero-extension rule."""
         out = jnp.zeros(self.shape, self.vals.dtype)
         return out.at[self.rows, self.cols].add(self.vals)
 
@@ -293,10 +539,14 @@ class ELL:
 
     @property
     def n_rows_padded(self) -> int:
+        """Row count padded up to the row tile."""
         return self.vals.shape[0]
 
     @staticmethod
     def fromcsr(csr: CSR, width: int | None = None, row_tile: int = 8) -> "ELL":
+        """CSR -> ELL with rows padded to ``width`` (default: the max row
+        length) and the row count to ``row_tile`` (host-side numpy pass —
+        requires concrete arrays)."""
         indptr = np.asarray(csr.indptr).astype(np.int64)
         indices = np.asarray(csr.indices)
         vals = np.asarray(csr.vals)
@@ -318,6 +568,7 @@ class ELL:
                    shape=csr.shape, width=w)
 
     def todense(self) -> jax.Array:
+        """Dense (n_rows, n_cols) array (padding slots contribute 0)."""
         n_rows, _ = self.shape
         rows = jnp.repeat(jnp.arange(self.n_rows_padded), self.width)
         out = jnp.zeros((self.n_rows_padded, self.shape[1]), self.vals.dtype)

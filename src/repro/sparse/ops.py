@@ -142,16 +142,33 @@ def _spmm_csr_diff(a: CSR, b, sched: Schedule, interpret: bool,
     n_rows, n_cols = a.shape
 
     if sched.kernel == "eb":
-        g0 = a.grouped(sched.nnz_tile)
-        pad = g0.nnz_padded - g0.nnz
+        g0 = a.grouped(sched.nnz_tile, group_size=sched.group_size,
+                       split_threshold=sched.split_threshold,
+                       merge_threshold=sched.merge_threshold)
+        if g0.skew is not None:
+            # skew layout interleaves padding, so fresh vals are placed
+            # by the memoized scatter index rather than a trailing pad
+            pos = g0.skew_positions()
 
-        def run(vals, bb, bias_x, res_x):
-            vpad = jnp.concatenate(
-                [vals, jnp.zeros((pad,), vals.dtype)]) if pad else vals
-            g = GroupedCOO(rows=g0.rows, cols=g0.cols, vals=vpad,
-                           shape=g0.shape, nnz=g0.nnz, nnz_tile=g0.nnz_tile)
-            return kops.spmm(g, bb, sched, bias=bias_x, residual=res_x,
-                             interpret=interpret)
+            def run(vals, bb, bias_x, res_x):
+                vpad = jnp.zeros((g0.nnz_padded,),
+                                 vals.dtype).at[pos].set(vals)
+                g = GroupedCOO(rows=g0.rows, cols=g0.cols, vals=vpad,
+                               shape=g0.shape, nnz=g0.nnz,
+                               nnz_tile=g0.nnz_tile, skew=g0.skew)
+                return kops.spmm(g, bb, sched, bias=bias_x,
+                                 residual=res_x, interpret=interpret)
+        else:
+            pad = g0.nnz_padded - g0.nnz
+
+            def run(vals, bb, bias_x, res_x):
+                vpad = jnp.concatenate(
+                    [vals, jnp.zeros((pad,), vals.dtype)]) if pad else vals
+                g = GroupedCOO(rows=g0.rows, cols=g0.cols, vals=vpad,
+                               shape=g0.shape, nnz=g0.nnz,
+                               nnz_tile=g0.nnz_tile)
+                return kops.spmm(g, bb, sched, bias=bias_x,
+                                 residual=res_x, interpret=interpret)
     else:
         ell0 = a.ell(row_tile=sched.row_tile)
         rid, pos = a.ell_scatter_index()
@@ -165,13 +182,13 @@ def _spmm_csr_diff(a: CSR, b, sched: Schedule, interpret: bool,
                              interpret=interpret)
 
     @jax.custom_vjp
-    def fn(vals, bb, bias_x, res_x):
+    def _fn(vals, bb, bias_x, res_x):
         return run(vals, bb, bias_x, res_x)
 
-    def fwd(vals, bb, bias_x, res_x):
+    def _fwd(vals, bb, bias_x, res_x):
         return run(vals, bb, bias_x, res_x), (vals, bb, bias_x, res_x)
 
-    def bwd(res, dout):
+    def _bwd(res, dout):
         vals, bb, bias_x, res_x = res
         dout = dout.astype(jnp.float32)
         dres = dout.astype(res_x.dtype) if ep.residual else None
@@ -195,8 +212,8 @@ def _spmm_csr_diff(a: CSR, b, sched: Schedule, interpret: bool,
         db = ref.spmm_coo_ref(cols, rows, vals, dz, n_cols).astype(bb.dtype)
         return dvals, db, dbias, dres
 
-    fn.defvjp(fwd, bwd)
-    return fn(a.vals, b, bias, residual)
+    _fn.defvjp(_fwd, _bwd)
+    return _fn(a.vals, b, bias, residual)
 
 
 def sddmm(rows, cols, a, b, scale=None, *, schedule=None,
@@ -381,7 +398,7 @@ def _sparse_attention_diff(rows, cols, qh, kh, vh, n_rows, scale, sched,
     dv_tile = min(128, round_up(dv, 8))
     dv_pad = round_up(dv, dv_tile)
 
-    def run_fwd(q, k, v):
+    def _run_fwd(q, k, v):
         v_p = (jnp.pad(v, ((0, 0), (0, 0), (0, dv_pad - dv)))
                if dv_pad != dv else v)
         out, m, l = _fused_attn_fwd(
@@ -392,14 +409,14 @@ def _sparse_attention_diff(rows, cols, qh, kh, vh, n_rows, scale, sched,
         return out[..., :dv], m, l
 
     @jax.custom_vjp
-    def fn(q, k, v):
-        return run_fwd(q, k, v)[0]
+    def _fn(q, k, v):
+        return _run_fwd(q, k, v)[0]
 
-    def fwd(q, k, v):
-        out, m, l = run_fwd(q, k, v)
+    def _fwd(q, k, v):
+        out, m, l = _run_fwd(q, k, v)
         return out, (q, k, v, m, l)
 
-    def bwd(res, dout):
+    def _bwd(res, dout):
         q, k, v, m, l = res
         dq, dk, dv_ = _fused_attn_bwd(
             rows_p, cols_p, q, k, v, dout, m, l, n_rows=n_rows, nnz=nnz,
@@ -408,5 +425,5 @@ def _sparse_attention_diff(rows, cols, qh, kh, vh, n_rows, scale, sched,
         return (dq.astype(q.dtype), dk.astype(k.dtype),
                 dv_.astype(v.dtype))
 
-    fn.defvjp(fwd, bwd)
-    return fn(qh, kh, vh)
+    _fn.defvjp(_fwd, _bwd)
+    return _fn(qh, kh, vh)

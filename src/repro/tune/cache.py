@@ -61,7 +61,10 @@ __all__ = [
     "set_default_cache",
 ]
 
-SCHEMA_VERSION = 1
+# 2: Schedule gained split/merge thresholds (skew-aware two-level
+# grouping, DESIGN.md §11) — pre-skew records are dropped on load (the
+# version gate below) so they re-tune against the enlarged space.
+SCHEMA_VERSION = 2
 
 _QUANTILES = (0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)
 
@@ -94,12 +97,12 @@ def fingerprint(csr) -> str:
     has one): the O(n_rows) histogram pass runs once per matrix, so
     serving-path lookups (``ServeEngine.spmm`` -> ``cached_or_auto``)
     cost a dict probe, not a device sync."""
-    def build():
+    def _build():
         return fingerprint_from_lengths(
             np.asarray(csr.row_lengths()), csr.shape, csr.nnz)
 
     cached = getattr(csr, "_cached", None)
-    return cached("fingerprint", build) if cached is not None else build()
+    return cached("fingerprint", _build) if cached is not None else _build()
 
 
 def cache_key(csr, n_dense_cols: int) -> str:
@@ -170,6 +173,8 @@ class TuneRecord:
     measured: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
+        """Serialize to a plain dict, tagging non-Schedule kinds (``moe``,
+        ``fuse``) so ``from_json`` can reconstruct the right type."""
         from ..fuse.ir import FuseDecision
         from .moe import MoeDispatchSchedule
 
@@ -192,6 +197,7 @@ class TuneRecord:
 
     @staticmethod
     def from_json(d: dict) -> "TuneRecord":
+        """Inverse of :meth:`to_json`; dispatches on the ``kind`` tag."""
         if d.get("kind") == "moe":
             from .moe import MoeDispatchSchedule
 
@@ -302,6 +308,8 @@ class ScheduleCache:
                 self._data.setdefault(base, rec)
 
     def load(self) -> "ScheduleCache":
+        """Read the backing file once (idempotent), folding in legacy
+        pre-namespacing keys for this backend.  Returns self."""
         if self._loaded:
             return self
         self._loaded = True
@@ -319,6 +327,8 @@ class ScheduleCache:
         return self
 
     def save(self) -> None:
+        """Persist records atomically, merging with concurrent writers
+        under an exclusive file lock (our own keys win)."""
         if self.path is None:
             return
         self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -350,10 +360,12 @@ class ScheduleCache:
     # -- mapping -----------------------------------------------------------
 
     def get(self, key: str) -> Optional[TuneRecord]:
+        """Record for ``key`` (schema-current records only), or None."""
         self.load()
         return self._data.get(key)
 
     def put(self, key: str, record: TuneRecord) -> None:
+        """Insert/overwrite in memory; call :meth:`save` to persist."""
         self.load()
         self._data[key] = record
 
@@ -365,6 +377,7 @@ class ScheduleCache:
         return self.get(key) is not None
 
     def keys(self):
+        """All cached schedule keys (loads the backing file first)."""
         self.load()
         return self._data.keys()
 

@@ -49,6 +49,9 @@ class CalibrationSample:
 
 @dataclasses.dataclass(frozen=True)
 class CalibrationResult:
+    """Fitted cost-model weights plus before/after ranking regret on
+    the calibration sample set."""
+
     weights: Tuple[float, float, float, float]
     regret_before: float
     regret_after: float

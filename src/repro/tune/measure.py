@@ -43,6 +43,8 @@ def bench_iters(default: int = 7) -> int:
 
 
 def bench_warmup(default: int = 2) -> int:
+    """Warmup iterations per measurement; override with
+    REPRO_BENCH_WARMUP (CI smoke lowers it to fit its time budget)."""
     return max(0, int(os.environ.get("REPRO_BENCH_WARMUP", default)))
 
 
@@ -103,39 +105,69 @@ def _apply_epilogue(out, epilogue, bias, res):
 
 
 def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
-                   nnz_tile: int = 256, epilogue=None):
-    g = csr.grouped(max(nnz_tile, group_size))
+                   nnz_tile: int = 256, epilogue=None,
+                   split_threshold: int | None = None,
+                   merge_threshold: int | None = None):
+    """Jitted pure-JAX analogue of the EB kernel schedule.
+
+    With split/merge thresholds the feed is the two-level skew layout
+    (DESIGN.md §11): the leading heavy region holds single-row groups,
+    so it reduces with a cheap per-group sum + leader ``segment_sum``
+    (the 'parallel' realization's cost shape) instead of the full
+    segment-group machinery — the measured program genuinely changes
+    with the thresholds, which is what lets the tuner prefer them on
+    power-law inputs."""
+    tile = max(nnz_tile, group_size)
+    g = csr.grouped(tile, group_size=group_size,
+                    split_threshold=split_threshold,
+                    merge_threshold=merge_threshold)
     n_rows = csr.shape[0]
+    hn = g.heavy_tiles * tile  # static heavy-region lane count
     bias, res = _epilogue_args(epilogue, n_rows, n_dense)
 
-    def run(rows, cols, vals, b):
+    def _run(rows, cols, vals, b):
         partial = vals[:, None].astype(jnp.float32) * jnp.take(
             b.astype(jnp.float32), cols, axis=0)
         if strategy == GroupReduceStrategy.ACCUMULATE.value:
             out = jax.ops.segment_sum(partial, rows, num_segments=n_rows)
         else:
-            # any registered strategy name dispatches through the registry
-            out = segment_group_reduce(partial, rows, n_rows,
-                                       group_size=group_size,
-                                       strategy=strategy)
+            tail_p, tail_r = partial, rows
+            out = jnp.zeros((n_rows, partial.shape[1]), jnp.float32)
+            if hn:
+                # heavy region: groups are single-row, so a plain
+                # within-group sum + one scatter per group (the
+                # 'parallel' realization) replaces the one-hot reduce
+                gsum = partial[:hn].reshape(-1, group_size,
+                                            partial.shape[1]).sum(1)
+                leaders = rows[:hn].reshape(-1, group_size)[:, 0]
+                out = out + jax.ops.segment_sum(gsum, leaders,
+                                                num_segments=n_rows)
+                tail_p, tail_r = partial[hn:], rows[hn:]
+            if tail_p.shape[0]:
+                # any registered strategy name dispatches via the registry
+                out = out + segment_group_reduce(tail_p, tail_r, n_rows,
+                                                 group_size=group_size,
+                                                 strategy=strategy)
         return _apply_epilogue(out, epilogue, bias, res)
 
-    fn = jax.jit(run)
+    fn = jax.jit(_run)
     args = (g.rows, g.cols, g.vals, _dense_b(csr, n_dense))
     return fn, args
 
 
 def make_rb_runner(csr, n_dense, *, row_tile: int = 8,
                    width: int | None = None, epilogue=None):
+    """Jitted (fn, args) measuring the row-balanced (ELL) SpMM analogue
+    with the epilogue folded into the measured program."""
     ell = csr.ell(row_tile=row_tile, width=width)
     n_rows = csr.shape[0]
     bias, res = _epilogue_args(epilogue, n_rows, n_dense)
 
-    def run(ecols, evals, b):
+    def _run(ecols, evals, b):
         return _apply_epilogue(ref.spmm_ell_ref(ecols, evals, b, n_rows),
                                epilogue, bias, res)
 
-    fn = jax.jit(run)
+    fn = jax.jit(_run)
     args = (ell.cols, ell.vals, _dense_b(csr, n_dense))
     return fn, args
 
@@ -147,7 +179,9 @@ def make_runner(csr, n_dense: int, sched: Schedule):
         return make_eb_runner(csr, n_dense, group_size=sched.group_size,
                               strategy=sched.strategy,
                               nnz_tile=sched.nnz_tile,
-                              epilogue=sched.epilogue)
+                              epilogue=sched.epilogue,
+                              split_threshold=sched.split_threshold,
+                              merge_threshold=sched.merge_threshold)
     return make_rb_runner(csr, n_dense, row_tile=sched.row_tile,
                           epilogue=sched.epilogue)
 

@@ -91,6 +91,7 @@ class MoeDispatchSchedule:
                              f"got {self.capacity_factor!r}")
 
     def replace(self, **kw) -> "MoeDispatchSchedule":
+        """Copy with the given fields replaced (re-validates)."""
         return dataclasses.replace(self, **kw)
 
 
@@ -281,7 +282,7 @@ def make_moe_runner(expert_lengths, d_model: int, d_ff: int,
     x, w1, w2 = (a.astype(dtype) for a in (x, w1, w2))
     emap = jnp.asarray(tile_experts)
 
-    def run(x, w1, w2):
+    def _run(x, w1, w2):
         xt = x.reshape(n_tiles, tt, d // dt, dt)
         w1t = w1[emap].reshape(n_tiles, d // dt, dt, f // ft, ft)
         h = jnp.einsum("ntkc,nkcmf->ntmf", xt, w1t,
@@ -292,7 +293,7 @@ def make_moe_runner(expert_lengths, d_model: int, d_ff: int,
                        preferred_element_type=jnp.float32)
         return y.reshape(e * cap_pad, d)
 
-    return jax.jit(run), (x, w1, w2)
+    return jax.jit(_run), (x, w1, w2)
 
 
 def measure_moe_dispatch(expert_lengths, d_model: int, d_ff: int,
@@ -371,19 +372,19 @@ def tune_moe_dispatch(
     ranked = sorted(cands, key=lambda s: moe_cost(expert_lengths, s,
                                                   d_model, d_ff, max_tokens))
 
-    def eff(s: MoeDispatchSchedule) -> tuple:
+    def _eff(s: MoeDispatchSchedule) -> tuple:
         return _effective_program(expert_lengths, s, d_model, d_ff,
                                   max_tokens)
 
     # dedupe on the *effective* program: nominal points that fit to the
     # same (tile, cap_pad, dt, ft) compile identically, so measuring two
     # of them would let timing noise pick a "winner"
-    seen_eff = {eff(default)}
+    seen_eff = {_eff(default)}
     pool: List[MoeDispatchSchedule] = [default]
     for s in ranked:
         if len(pool) > top_k:
             break
-        sig = eff(s)
+        sig = _eff(s)
         if s in pool or sig in seen_eff:
             continue
         seen_eff.add(sig)
@@ -394,10 +395,10 @@ def tune_moe_dispatch(
 
     for _ in range(hill_steps):
         nbs = [s for s in _moe_neighbors(best, factors)
-               if not memo.seen(s) and eff(s) not in seen_eff]
+               if not memo.seen(s) and _eff(s) not in seen_eff]
         if not nbs:
             break
-        seen_eff.update(eff(s) for s in nbs)
+        seen_eff.update(_eff(s) for s in nbs)
         contender = min(nbs, key=memo)
         if memo(contender) >= memo(best):
             break

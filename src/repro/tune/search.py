@@ -42,11 +42,17 @@ __all__ = [
 
 
 def schedule_key(s: Schedule) -> str:
-    """Stable string identity of a schedule point (JSON-safe dict key)."""
+    """Stable string identity of a schedule point (JSON-safe dict key).
+
+    Skew thresholds are part of the identity: a skew-partitioned point
+    measures a different program than the plain point with the same
+    tiling, so they must not share a memo/cache slot."""
     tile = s.nnz_tile if s.kernel == "eb" else s.row_tile
     ep = "" if s.epilogue.is_noop else f":ep[{s.epilogue.tag}]"
+    skew = (f":s{s.split_threshold}:m{s.merge_threshold}"
+            if s.is_skew else "")
     return (f"{s.kernel}:t{tile}:c{s.col_tile}:G{s.group_size}"
-            f":{s.strategy}{ep}")
+            f":{s.strategy}{skew}{ep}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +67,7 @@ class TuneResult:
 
     @property
     def n_measurements(self) -> int:
+        """Timing measurements this run paid for (0 on cache replay)."""
         return 0 if self.from_cache else len(self.measured)
 
 
@@ -98,10 +105,57 @@ def _neighbors(s: Schedule) -> List[Schedule]:
             if (max(_MIN_TILE, s.group_size) <= t <= _MAX_NNZ_TILE
                     and t != s.nnz_tile):
                 _try(nnz_tile=t)
+        if s.is_skew:
+            # skew thresholds are searched like the tile axes: x2 / /2
+            # moves (invalid combinations — e.g. merge > split — are
+            # rejected by Schedule validation inside _try), plus the
+            # escape hatch back to the plain layout
+            if s.split_threshold is not None:
+                for st in (s.split_threshold * 2, s.split_threshold // 2):
+                    if st >= 1 and st != s.split_threshold:
+                        _try(split_threshold=st)
+            mt = s.merge_threshold
+            if mt is not None:
+                for m in {mt * 2, mt // 2, mt + 1 if mt == 0 else 0}:
+                    if m is not None and m >= 0 and m != mt:
+                        _try(merge_threshold=m)
+            _try(split_threshold=None, merge_threshold=None)
     else:
         for rt in (s.row_tile * 2, s.row_tile // 2):
             if 1 <= rt <= _MAX_ROW_TILE and rt != s.row_tile:
                 _try(row_tile=rt)
+    return out
+
+
+def _skew_candidates(stats: dict, seeds: List[Schedule]) -> List[Schedule]:
+    """Two-level skew variants of the best eb seed for high-CV matrices.
+
+    Thresholds come from the ``row_quantiles`` in ``matrix_stats`` (the
+    same histogram the cache fingerprint hashes, so a cached decision
+    replays measurement-free): split at ~q90/q99 so only genuine hubs
+    pay the cross-group combine, merge at ~q50 so the light-row majority
+    packs densely.  Low-CV matrices get no candidates — the plain layout
+    already balances them.
+    """
+    rq = dict(stats.get("row_quantiles") or ())
+    if stats.get("row_cv", 0.0) <= 1.0 or not rq:
+        return []
+    base = next((s for s in seeds if s.kernel == "eb" and not s.is_skew),
+                None)
+    if base is None:
+        return []
+    q50, q90, q99 = rq.get(50, 0), rq.get(90, 0), rq.get(99, 0)
+    out: List[Schedule] = []
+    for split_q in (q90, q99):
+        split = max(2, base.group_size, int(split_q))
+        merge = max(0, min(int(q50), split))
+        for m in {merge, 0}:
+            try:
+                s = base.replace(split_threshold=split, merge_threshold=m)
+            except ValueError:
+                continue
+            if s not in out:
+                out.append(s)
     return out
 
 
@@ -132,6 +186,7 @@ class _Memo:
         return self.timings[k]
 
     def seen(self, s) -> bool:
+        """True when ``s`` has already been measured this run."""
         return self._key_fn(s) in self.timings
 
 
@@ -208,13 +263,13 @@ def tune_schedule(
             return measure_schedule(csr, n_dense_cols, s,
                                     warmup=warmup, iters=iters)
 
-    def with_ep(s: Schedule) -> Schedule:
+    def _with_ep(s: Schedule) -> Schedule:
         return s if epilogue is None else s.replace(epilogue=epilogue)
 
     ranked = sorted(_feasible(candidate_schedules(n_dense_cols), stats),
                     key=lambda s: predict_cost(stats, s, n_dense_cols))
-    ranked = [with_ep(s) for s in ranked]
-    pool: List[Schedule] = [with_ep(select_schedule(stats, n_dense_cols))]
+    ranked = [_with_ep(s) for s in ranked]
+    pool: List[Schedule] = [_with_ep(select_schedule(stats, n_dense_cols))]
     for s in ranked:
         if len(pool) > top_k:
             break
@@ -228,6 +283,13 @@ def tune_schedule(
         fam = next((s for s in ranked if s.kernel == kernel), None)
         if fam is not None and not any(s.kernel == kernel for s in pool):
             pool.append(fam)
+    # skew entry points: on high-CV (power-law) matrices, seed the pool
+    # with two-level split/merge variants of the best-ranked eb point,
+    # thresholds placed from the row-length quantiles the fingerprint
+    # already hashes (DESIGN.md §11) — hillclimb then refines them.
+    for s in _skew_candidates(stats, pool + ranked):
+        if s not in pool:
+            pool.append(s)
 
     memo = _Memo(measure)
     best = min(pool, key=memo)
