@@ -383,6 +383,143 @@ def selector_quality(quick=True):
     return rows
 
 
+def _dist_mesh():
+    """The 1-D reduction mesh over whatever devices exist: 8 forced host
+    devices in the CI ``dist`` lane, 1 elsewhere (degenerate but valid —
+    collectives compile away, win ratios sit at ~1.0)."""
+    from repro.launch.mesh import make_reduction_mesh
+
+    mesh = make_reduction_mesh()
+    return mesh, int(mesh.shape["shards"])
+
+
+def dist_attention_gap(quick=True):
+    """Tuned-vs-fixed collective mode for distributed fused attention
+    (DESIGN.md §12): time ``dist_attention_shard_map`` under every
+    feasible wire mode (row / nnz_ar / nnz_rs) on the real mesh, report
+    the fixed atomic-style psum ('nnz_ar') vs the measured best — the
+    best is the measured minimum of a pool containing the fixed mode, so
+    the geomean is >= 1.0 by construction — and, on a >1-device mesh,
+    the compiled nnz_rs collective bytes against the roofline
+    prediction (acceptance: within 10%)."""
+    from repro.roofline.analysis import (collective_bytes,
+                                         predict_attention_collective_bytes)
+    from repro.sparse import Schedule
+    from repro.sparse.distributed import (dist_attention_shard_map,
+                                          partition_nnz_coo,
+                                          partition_rows_coo)
+    from repro.sparse.random import power_law_csr, random_csr
+
+    mesh, axis_size = _dist_mesh()
+    n = 128 if quick else 256
+    d = dv = 16 if quick else 32
+    h = 2
+    sched = Schedule("eb", nnz_tile=64, group_size=8)
+    mats = [("powerlaw", power_law_csr(n, n, avg_degree=6.0, alpha=1.6,
+                                       seed=0)),
+            ("uniform", random_csr(n, n, density=0.05, seed=1))]
+    modes = ["nnz_ar"]
+    if n % axis_size == 0:
+        modes += ["nnz_rs", "row"]
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (h, n, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (h, n, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (h, n, dv))
+
+    rows_out, wins = [], []
+    bytes_row = None
+    for name, csr in mats:
+        timings = {}
+        for mode in modes:
+            part = partition_rows_coo if mode == "row" else partition_nnz_coo
+            rows, cols, _, _ = part(csr, axis_size, sched.nnz_tile,
+                                    pattern_only=True, phantom_row=True)
+            fn = jax.jit(lambda r, c, qq, kk, vv, _m=mode: (
+                dist_attention_shard_map(r, c, qq, kk, vv, n_rows=n,
+                                         mesh=mesh, axis="shards",
+                                         mode=_m, schedule=sched)))
+            timings[mode] = time_fn(fn, rows, cols, q, k, v,
+                                    warmup=1, iters=3) * 1e6
+            if (bytes_row is None and mode == "nnz_rs" and axis_size > 1):
+                compiled = fn.lower(rows, cols, q, k, v).compile()
+                colls = collective_bytes(compiled.as_text())
+                meas = sum(rec["bytes"] for rec in colls.values())
+                pred = predict_attention_collective_bytes(
+                    "nnz_rs", n_heads=h, n_rows=n, dv_pad=dv,
+                    axis_size=axis_size)
+                bytes_row = ("beyond/dist_attention_bytes", 0.0,
+                             f"mode=nnz_rs,coll_bytes_meas={meas},"
+                             f"coll_bytes_pred={pred},"
+                             f"meas_vs_pred={meas / max(pred, 1):.3f}")
+        best_mode = min(timings, key=timings.get)
+        wins.append(timings["nnz_ar"] / max(timings[best_mode], 1e-9))
+        detail = ",".join(f"{m}_us={timings[m]:.1f}" for m in modes)
+        rows_out.append((f"beyond/dist_attention/{name}",
+                         timings[best_mode],
+                         f"best={best_mode},axis={axis_size},{detail},"
+                         f"tuned_vs_fixed={wins[-1]:.3f}"))
+    if bytes_row is not None:
+        rows_out.append(bytes_row)
+    rows_out.append(("beyond/dist_attention_gap", 0.0,
+                     f"tuned_vs_fixed_geomean={geomean(wins):.3f}"))
+    return rows_out
+
+
+def dist_moe_gap(quick=True):
+    """Tuned-vs-fixed expert-parallel writeback collective (DESIGN.md
+    §12): ``moe_tune_collective`` measures ``apply_moe`` end to end
+    under psum ('nnz_ar', the fixed historical mode) and psum_scatter
+    ('nnz_rs') on the real mesh and picks the winner; the win ratio is
+    fixed/best >= 1.0 by construction.  On a >1-device mesh the
+    compiled nnz_rs collective bytes are checked against the roofline
+    prediction."""
+    from repro.models.moe import (ShardingCtx, default_dispatch,
+                                  moe_tune_collective)
+    from repro.roofline.analysis import (collective_bytes,
+                                         predict_collective_bytes)
+    from repro.tune import ScheduleCache
+    from repro.tune.moe import moe_schedule_key
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("model",))
+    ctx = ShardingCtx(mesh=mesh, data_axes=(), model_axis="model")
+    cfg = smoke_config(ARCHS["qwen3-moe-235b-a22b"]).scaled(
+        d_model=64, moe_d_ff=64 if quick else 128, n_experts=8,
+        experts_per_token=2)
+    t_tokens = 256 if quick else 1024
+    p = init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (t_tokens, cfg.d_model))
+
+    cache = ScheduleCache(path=None)  # never touch the user's cache
+    res = moe_tune_collective(cfg, p, x, ctx, cache=cache,
+                              warmup=1, iters=3)
+    base = default_dispatch(cfg)
+    fixed_key = moe_schedule_key(base.replace(collective="nnz_ar"))
+    t_fixed = res.measured[fixed_key]
+    win = t_fixed / max(res.us_per_call, 1e-9)
+    rows = [(f"beyond/dist_moe/{key.rsplit('w[', 1)[-1].rstrip(']')}",
+             us, f"axis={n_dev}")
+            for key, us in sorted(res.measured.items())]
+    if n_dev > 1:
+        sched = base.replace(collective="nnz_rs")
+        fn = jax.jit(lambda xx: apply_moe(cfg, p, xx, ctx,
+                                          dispatch=sched)[0])
+        compiled = fn.lower(x).compile()
+        colls = collective_bytes(compiled.as_text())
+        meas = sum(rec["bytes"] for rec in colls.values())
+        pred = predict_collective_bytes("nnz_rs", (t_tokens, cfg.d_model),
+                                        axis_size=n_dev)
+        rows.append(("beyond/dist_moe_bytes", 0.0,
+                     f"mode=nnz_rs,coll_bytes_meas={meas},"
+                     f"coll_bytes_pred={pred},"
+                     f"meas_vs_pred={meas / max(pred, 1):.3f}"))
+    rows.append(("beyond/dist_moe_gap", 0.0,
+                 f"tuned={res.schedule.collective},"
+                 f"fixed_us={t_fixed:.1f},"
+                 f"tuned_vs_fixed_geomean={win:.3f}"))
+    return rows
+
+
 def skew_tuner_gap(quick=True):
     """Skew-aware two-level scheduling on power-law graphs (ISSUE 7).
 

@@ -6,8 +6,8 @@ Compares ``BENCH_<tag>.json`` artifacts (as written by
 past a threshold.  Signals checked:
 
 * **us_per_call geomeans** per row group (default groups: ``table5``,
-  ``beyond/fused_attention_bwd``, ``beyond/fusion_planner`` and
-  ``beyond/skew``):
+  ``beyond/fused_attention_bwd``, ``beyond/fusion_planner``,
+  ``beyond/skew``, ``beyond/dist_attention`` and ``beyond/dist_moe``):
   geomean over the names both artifacts share.  When both artifacts
   carry the ``probe/runner_speed`` row (a fixed dense-matmul timing
   baked into every artifact), the geomeans are **normalized by the
@@ -18,8 +18,8 @@ past a threshold.  Signals checked:
 * **derived geomean metrics** — ``derived`` fields carry
   ``<key>_geomean=<x>`` ratios.  Only the *win* ratios in
   ``GATED_GEOMEAN_KEYS`` (``tuned_vs_auto_geomean``,
-  ``tuned_vs_default_geomean``, ``tuned_vs_static_geomean`` — higher is
-  better) gate, failing when
+  ``tuned_vs_default_geomean``, ``tuned_vs_static_geomean``,
+  ``tuned_vs_fixed_geomean`` — higher is better) gate, failing when
   ``new < old * (1 - threshold)``; other geomean keys are reported
   informationally but never fail — both the ``*_vs_oracle`` slowdown
   ratios (lower is better) and ``fused_vs_unfused_geomean`` (a win
@@ -53,12 +53,16 @@ import sys
 
 # groups whose probe-normalized us geomeans gate: table5 (the paper's
 # headline kernels), the fused attention backward (ISSUE 5), the
-# fusion planner's fused chains (ISSUE 6), and the skew-aware tuner on
-# power-law graphs (ISSUE 7).  A group's *first* appearance in a
-# trajectory has no shared rows and skips green; thereafter a
-# >threshold normalized slowdown fails.
+# fusion planner's fused chains (ISSUE 6), the skew-aware tuner on
+# power-law graphs (ISSUE 7), and the distributed collective-mode
+# benches (ISSUE 8 — their rows appear in both the smoke lane's
+# 1-device artifact and the dist lane's 8-device artifact; each lane
+# keeps its own trajectory, so the two never cross-compare).  A group's
+# *first* appearance in a trajectory has no shared rows and skips
+# green; thereafter a >threshold normalized slowdown fails.
 DEFAULT_GROUPS = ("table5", "beyond/fused_attention_bwd",
-                  "beyond/fusion_planner", "beyond/skew")
+                  "beyond/fusion_planner", "beyond/skew",
+                  "beyond/dist_attention", "beyond/dist_moe")
 DEFAULT_WINDOW = 5
 PROBE_ROW = "probe/runner_speed"
 TRAJECTORY_VERSION = 1
@@ -72,8 +76,12 @@ TRAJECTORY_VERSION = 1
 # tuned_vs_static_geomean (beyond/skew) gates: tuned and static come
 # from one measured pool, so the ratio is load-robust like the other
 # within-run win ratios.
+# tuned_vs_fixed_geomean (beyond/dist_*) gates too: tuned is the
+# measured minimum of a pool containing the fixed mode, so the ratio is
+# >= 1.0 by construction and load-robust like the other within-run
+# win ratios.
 GATED_GEOMEAN_KEYS = ("tuned_vs_auto_geomean", "tuned_vs_default_geomean",
-                      "tuned_vs_static_geomean")
+                      "tuned_vs_static_geomean", "tuned_vs_fixed_geomean")
 
 _GEOMEAN_RE = re.compile(r"([a-z0-9_/]*geomean)=([-+0-9.eE]+)")
 

@@ -40,23 +40,30 @@ def runner_speed_probe():
     return [(PROBE_ROW, t * 1e6, "fixed 512x512 f32 matmul, iters=7")]
 
 
-#: The bench registry: group name -> (module, function).  ``--only``'s
-#: help text and the unknown-bench error are generated from this dict,
-#: so adding a bench here is the *single* registration step (the group
-#: lists in help/docstrings previously drifted — ISSUE 7 satellite).
+#: The bench registry: group name -> (module, function, tags).  ``--only``
+#: accepts names AND tags ('-'/'_' interchangeable), so CI lanes invoke a
+#: tag (``--only ci-smoke``, ``--only dist``) instead of a hand-kept
+#: comma list that drifts when a bench is added.  ``ci_smoke`` marks the
+#: smoke-lane set (it must cover every ``benchmarks/diff.py``
+#: DEFAULT_GROUPS prefix — tested in tests/test_benchmarks.py); ``dist``
+#: marks the multi-device benches the 8-device CI lane re-runs on a real
+#: mesh.  Adding a bench here is the *single* registration step.
 BENCHES = {
-    "table1": ("tables", "table1_group_size"),
-    "table2": ("tables", "table2_segment_vs_atomic"),
-    "table3": ("tables", "table3_new_vs_original"),
-    "table4": ("tables", "table4_tuning"),
-    "table5": ("tables", "table5_dynamic_choice"),
-    "moe": ("beyond", "moe_dispatch"),
-    "moe_tuner": ("beyond", "moe_tuner_gap"),
-    "selector": ("beyond", "selector_quality"),
-    "fused_attention": ("beyond", "fused_attention"),
-    "fused_attention_bwd": ("beyond", "fused_attention_bwd"),
-    "fusion_planner": ("beyond", "fusion_planner"),
-    "skew": ("beyond", "skew_tuner_gap"),
+    "table1": ("tables", "table1_group_size", {"ci_smoke"}),
+    "table2": ("tables", "table2_segment_vs_atomic", set()),
+    "table3": ("tables", "table3_new_vs_original", set()),
+    "table4": ("tables", "table4_tuning", set()),
+    "table5": ("tables", "table5_dynamic_choice", {"ci_smoke"}),
+    "moe": ("beyond", "moe_dispatch", set()),
+    "moe_tuner": ("beyond", "moe_tuner_gap", {"ci_smoke"}),
+    "selector": ("beyond", "selector_quality", {"ci_smoke"}),
+    "fused_attention": ("beyond", "fused_attention", {"ci_smoke"}),
+    "fused_attention_bwd": ("beyond", "fused_attention_bwd", {"ci_smoke"}),
+    "fusion_planner": ("beyond", "fusion_planner", {"ci_smoke"}),
+    "skew": ("beyond", "skew_tuner_gap", {"ci_smoke"}),
+    "dist_attention": ("beyond", "dist_attention_gap",
+                       {"ci_smoke", "dist"}),
+    "dist_moe": ("beyond", "dist_moe_gap", {"ci_smoke", "dist"}),
 }
 
 
@@ -66,13 +73,43 @@ def bench_names() -> list:
     return list(BENCHES)
 
 
+def bench_tags() -> list:
+    """Every tag carried by at least one registered bench."""
+    tags = set()
+    for _, _, t in BENCHES.values():
+        tags |= t
+    return sorted(tags)
+
+
+def resolve_only(wanted: list) -> tuple:
+    """Expand an ``--only`` list into bench names: each entry is a bench
+    name first, else a tag ('-' and '_' interchangeable in both).
+    Returns (names in registry order, unknown entries)."""
+    picked, unknown = set(), []
+    by_norm = {name.replace("-", "_"): name for name in BENCHES}
+    for w in wanted:
+        norm = w.replace("-", "_")
+        if norm in by_norm:
+            picked.add(by_norm[norm])
+        else:
+            tagged = [name for name, (_, _, tags) in BENCHES.items()
+                      if norm in tags]
+            if tagged:
+                picked.update(tagged)
+            else:
+                unknown.append(w)
+    return [n for n in BENCHES if n in picked], unknown
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="larger matrices (slower, closer to paper scale)")
     ap.add_argument("--only", default=None,
-                    help="comma list of bench groups: "
-                         + ",".join(bench_names()))
+                    help="comma list of bench groups or tags ('-'/'_' "
+                         "interchangeable); groups: "
+                         + ",".join(bench_names())
+                         + "; tags: " + ",".join(bench_tags()))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write {name: {us_per_call, derived}} JSON")
     args = ap.parse_args()
@@ -84,12 +121,15 @@ def main() -> None:
     benches = {
         name: (lambda mod, fn: lambda: getattr(modules[mod], fn)(quick))(
             mod, fn)
-        for name, (mod, fn) in BENCHES.items()
+        for name, (mod, fn, _tags) in BENCHES.items()
     }
-    wanted = args.only.split(",") if args.only else list(benches)
-    unknown = [w for w in wanted if w not in benches]
-    if unknown:
-        ap.error(f"unknown bench(es) {unknown}; have {sorted(benches)}")
+    if args.only:
+        wanted, unknown = resolve_only(args.only.split(","))
+        if unknown:
+            ap.error(f"unknown bench(es)/tag(s) {unknown}; have "
+                     f"{sorted(benches)} and tags {bench_tags()}")
+    else:
+        wanted = list(benches)
     # the probe always runs (first, before the machine heats up caches
     # differently per bench subset) so every artifact is normalizable
     wanted = ["probe"] + [w for w in wanted if w != "probe"]
@@ -103,7 +143,8 @@ def main() -> None:
             for row in benches[name]():
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
                 results[row[0]] = {"us_per_call": float(row[1]),
-                                   "derived": str(row[2])}
+                                   "derived": str(row[2]),
+                                   "status": "ok"}
             sys.stdout.flush()
         except Exception as e:  # noqa: BLE001
             ok = False
@@ -114,7 +155,11 @@ def main() -> None:
             print(f"{name},NaN,ERROR:{e!r}", file=sys.stderr)
             traceback.print_exc(file=sys.stderr)
             sys.stderr.flush()
-            results[name] = {"us_per_call": None, "derived": f"ERROR:{e!r}"}
+            # ``status`` is the machine-readable failure flag: CI gates
+            # on it instead of grepping "ERROR" out of the CSV (a bench
+            # *name or derived text* containing ERROR must not trip it)
+            results[name] = {"us_per_call": None, "derived": f"ERROR:{e!r}",
+                             "status": "error"}
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1, sort_keys=True)

@@ -149,4 +149,28 @@ out_t = spmm(G, jax.random.normal(jax.random.PRNGKey(5), (1024, 4)),
              schedule=res.schedule)
 print("skew-tuned spmm runs: OK | cached replay:",
       tune_schedule(G, 4, cache=cache).from_cache)
+
+# 7. Mesh-elevated reduction strategies (DESIGN.md §12): the same
+#    strategy question one level up — shards hold partial row sums and
+#    the cross-shard combine is a collective ('row' = none, 'nnz_ar' =
+#    psum, 'nnz_rs' = reduce-scatter).  schedule='tune' picks kernel
+#    tiling AND wire mode in one pass and caches per mesh width.  Run
+#    with XLA_FLAGS=--xla_force_host_platform_device_count=8 to see a
+#    real 8-way mesh; on one device the mesh is degenerate but the path
+#    is identical.
+from repro.launch.mesh import make_reduction_mesh  # noqa: E402
+from repro.sparse import dist_spmm  # noqa: E402
+from repro.tune import tune_dist_spmm  # noqa: E402
+
+mesh = make_reduction_mesh()
+print(f"mesh: {mesh.shape}")
+Bg = jax.random.normal(jax.random.PRNGKey(5), (1024, 4))
+out_d = dist_spmm(G, Bg, mesh=mesh, axis="shards", schedule="tune",
+                  cache=cache)
+np.testing.assert_allclose(np.asarray(out_d),
+                           np.asarray(spmm(G, Bg, impl="ref")),
+                           rtol=1e-4, atol=1e-4)
+res_d = tune_dist_spmm(G, 4, mesh=mesh, axis="shards", cache=cache)
+print("distributed spmm matches oracle: OK | tuned collective:",
+      res_d.schedule.collective, "| cached replay:", res_d.from_cache)
 print("done")

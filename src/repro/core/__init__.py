@@ -11,6 +11,7 @@ from .atomic_parallelism import (  # noqa: F401
 )
 from .schedule import (  # noqa: F401
     ACTIVATIONS,
+    COLLECTIVES,
     Epilogue,
     ReductionStrategy,
     Schedule,
@@ -35,10 +36,13 @@ from .segment_group import (  # noqa: F401
 from .selector import (  # noqa: F401
     COST_TERM_NAMES,
     DEFAULT_COST_WEIGHTS,
+    WIRE_COST_WEIGHT,
     candidate_schedules,
+    collective_cost_terms,
     cost_terms,
     get_cost_weights,
     predict_cost,
+    predict_dist_cost,
     select_schedule,
     set_cost_weights,
 )

@@ -52,6 +52,7 @@ from .segment_group import (
 
 __all__ = [
     "ACTIVATIONS",
+    "COLLECTIVES",
     "Epilogue",
     "ReductionStrategy",
     "Schedule",
@@ -399,6 +400,13 @@ class Epilogue:
 # ---------------------------------------------------------------------------
 
 
+#: Collective-level realizations of the reduction strategies (DESIGN.md
+#: §12): how a shard_map-distributed op combines per-shard partials.
+#: 'row' ↔ parallel (disjoint outputs, no collective), 'nnz_ar' ↔ atomic
+#: (all-reduce), 'nnz_rs' ↔ segment (reduce-scatter).
+COLLECTIVES: Tuple[str, ...] = ("row", "nnz_ar", "nnz_rs")
+
+
 @dataclasses.dataclass(frozen=True)
 class Schedule:
     """TPU realization of a scheduling decision (DESIGN.md §3).
@@ -425,6 +433,16 @@ class Schedule:
     single-level layout; the empirical tuner searches the thresholds per
     matrix fingerprint alongside group size, and cached records replay
     them measurement-free.
+
+    collective (DESIGN.md §12) elevates the reduction strategy to the
+    mesh: how a ``shard_map``-distributed op combines per-shard partials
+    on the wire.  ``None`` (default) means single-device / caller-chosen;
+    'row' is the parallel realization (pre-partitioned rows, no
+    collective), 'nnz_ar' the atomic one (psum all-reduce of full-height
+    partials), 'nnz_rs' the segment one (psum_scatter — each shard keeps
+    its row slice, moving 1/P of the all-reduce bytes).  The distributed
+    tuner searches it alongside the kernel tiling and cached records
+    replay it measurement-free.
     """
 
     kernel: str = "eb"
@@ -436,6 +454,7 @@ class Schedule:
     epilogue: Epilogue = Epilogue()
     split_threshold: Optional[int] = None
     merge_threshold: Optional[int] = None
+    collective: Optional[str] = None
 
     def __post_init__(self):
         if self.kernel not in ("eb", "rb"):
@@ -465,6 +484,10 @@ class Schedule:
                     f"merge_threshold ({self.merge_threshold}) must not "
                     f"exceed split_threshold ({self.split_threshold}): a "
                     "row cannot be both merged and split")
+        if self.collective is not None and self.collective not in COLLECTIVES:
+            raise ValueError(
+                f"unknown collective {self.collective!r}; known: "
+                f"{sorted(COLLECTIVES)} (or None for single-device)")
 
     @property
     def is_skew(self) -> bool:
@@ -582,8 +605,11 @@ class Schedule:
         sk = ("" if not self.is_skew
               else f", split>={self.split_threshold}"
                    f"/merge<={self.merge_threshold}")
+        wire = ("" if self.collective is None
+                else f", collective={self.collective}")
         return (f"Schedule({self.kernel}, {tile}, col_tile={self.col_tile}, "
-                f"G={self.group_size}, strategy={self.strategy}{sk}{ep})")
+                f"G={self.group_size}, strategy={self.strategy}{sk}{wire}"
+                f"{ep})")
 
 
 def _lcm_tile(tile: int, group: int) -> int:

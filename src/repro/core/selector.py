@@ -29,10 +29,13 @@ from .segment_group import group_waste_fraction
 __all__ = [
     "select_schedule",
     "predict_cost",
+    "predict_dist_cost",
+    "collective_cost_terms",
     "candidate_schedules",
     "cost_terms",
     "COST_TERM_NAMES",
     "DEFAULT_COST_WEIGHTS",
+    "WIRE_COST_WEIGHT",
     "get_cost_weights",
     "set_cost_weights",
 ]
@@ -193,6 +196,66 @@ def predict_cost(stats: Dict, sched: Schedule, n_dense_cols: int,
     terms = cost_terms(stats, sched, n_dense_cols)
     return (w[0] * terms[0] + w[1] * terms[1]
             + w[2] * terms[2] + w[3] * terms[3])
+
+
+#: Relative weight of one wire element vs one local element op in
+#: :func:`predict_dist_cost`.  Interconnect bytes are far scarcer than
+#: local FLOPs (ICI vs HBM bandwidth), so a wire element costs more than
+#: a MAC; like the four local weights this is a ranking prior — the
+#: distributed tuner's measurements decide.
+WIRE_COST_WEIGHT = 8.0
+
+
+def collective_cost_terms(collective, *, n_rows: int, n_dense_cols: int,
+                          axis_size: int,
+                          shard_nnz: "Sequence[int] | None" = None,
+                          ) -> Tuple[float, float]:
+    """``(wire_elems, imbalance)`` of a collective mode (DESIGN.md §12).
+
+    wire_elems    per-device collective result *elements* — the bytes
+                  model ``roofline.analysis.predict_collective_bytes``
+                  divided by the itemsize: 'nnz_ar' moves the full
+                  ``n_rows * N`` partial, 'nnz_rs' its 1/P row slice,
+                  'row' nothing.
+    imbalance     max/mean per-shard nnz (>= 1.0): the straggler factor
+                  the slowest shard imposes on the whole step.  nnz
+                  splits are balanced by construction; 'row' splits
+                  inherit the row-block skew via ``shard_nnz``.
+    """
+    if axis_size <= 1 or collective in (None, "row"):
+        wire = 0.0
+    else:
+        wire = float(n_rows * n_dense_cols)
+        if collective == "nnz_rs":
+            wire /= axis_size
+        elif collective != "nnz_ar":
+            raise ValueError(f"unknown collective {collective!r}")
+    imbalance = 1.0
+    if shard_nnz:
+        mean = sum(shard_nnz) / len(shard_nnz)
+        if mean > 0:
+            imbalance = max(shard_nnz) / mean
+    return wire, imbalance
+
+
+def predict_dist_cost(stats: Dict, sched: Schedule, n_dense_cols: int, *,
+                      axis_size: int,
+                      shard_nnz: "Sequence[int] | None" = None) -> float:
+    """Relative cost of a distributed schedule point: the local cost
+    model scaled to the slowest shard, plus the wire term.
+
+    local work is ~1/P of the single-device :func:`predict_cost` times
+    the straggler factor; the collective adds ``WIRE_COST_WEIGHT``
+    element-costs per wire element.  Used by ``repro.tune``'s
+    distributed tuner to rank (tiling × collective) candidates before
+    measuring — same role :func:`predict_cost` plays single-device.
+    """
+    wire, imbalance = collective_cost_terms(
+        sched.collective, n_rows=stats["n_rows"],
+        n_dense_cols=n_dense_cols, axis_size=axis_size,
+        shard_nnz=shard_nnz)
+    local = predict_cost(stats, sched, n_dense_cols) / max(axis_size, 1)
+    return local * imbalance + WIRE_COST_WEIGHT * wire
 
 
 def select_schedule(stats: Dict, n_dense_cols: int) -> Schedule:

@@ -24,3 +24,20 @@ def make_local_mesh(model_parallel: int = 1):
     return jax.make_mesh(
         (n // model_parallel, model_parallel), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_reduction_mesh(axis_size: int | None = None, *,
+                        axis: str = "shards"):
+    """1-D mesh for the distributed reduction collectives (DESIGN.md §12:
+    ``repro.sparse.dist_spmm`` / ``dist_attention_shard_map`` and the
+    distributed tuner).  Unlike the production builders this avoids
+    ``jax.sharding.AxisType`` (absent in older jax), so it works on the
+    pinned toolchain and under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` in CI."""
+    n = len(jax.devices())
+    if axis_size is None:
+        axis_size = n
+    if n % axis_size:
+        raise ValueError(
+            f"axis_size={axis_size} does not divide device count {n}")
+    return jax.make_mesh((axis_size,), (axis,))

@@ -174,10 +174,26 @@ def apply_moe(cfg, p, x2d, ctx: ShardingCtx | None = None, *,
         functools.reduce(lambda a, b: a * b, (mesh.shape[a] for a in dax), 1))
     cap = _capacity(cfg, t_local, cap_factor)
 
+    # expert-parallel writeback mode (DESIGN.md §12): the tuned dispatch
+    # carries the collective the way Schedule carries it for SpMM —
+    # 'nnz_ar' is the atomic-style psum (the historical default),
+    # 'nnz_rs' reduce-scatters the partial so each model shard finalizes
+    # a token slice (1/P of the wire bytes).
+    mode = (dispatch.collective if dispatch is not None else None) or "nnz_ar"
+    m_size = int(mesh.shape[max_])
+    if mode == "nnz_rs" and t_local % m_size:
+        raise ValueError(
+            f"collective='nnz_rs' needs the local token count ({t_local}) "
+            f"divisible by the model axis ({m_size})")
+    out_spec = (P(tuple(dax) + (max_,), None) if mode == "nnz_rs"
+                else P(dax, None))
+
+    from ..sparse.distributed import shard_map
+
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(dax, None), P(), P(max_), P(max_), P(max_)),
-        out_specs=(P(dax, None), P()),
+        out_specs=(out_spec, P()),
     )
     def _sharded(x, router, wg, wi, wo):
         gates, probs = _route(cfg, x, router)  # (T_loc, E) all experts
@@ -188,7 +204,11 @@ def apply_moe(cfg, p, x2d, ctx: ShardingCtx | None = None, *,
             gates, (0, sl), (gates.shape[0], e_loc))
         part = _expert_ffn(cfg, x, wg, wi, wo, gates_loc, cap, use_pallas,
                            dispatch)
-        out = jax.lax.psum(part, max_)  # atomic-style collective writeback
+        if mode == "nnz_rs":
+            out = jax.lax.psum_scatter(part, max_, scatter_dimension=0,
+                                       tiled=True)
+        else:
+            out = jax.lax.psum(part, max_)  # atomic collective writeback
         aux = _aux_loss(cfg, gates, probs)
         aux = jax.lax.pmean(aux, dax) if dax else aux
         aux = jax.lax.pmean(aux, max_)
@@ -273,6 +293,62 @@ def moe_tune_dispatch(cfg, t_tokens: int, *, expert_lengths=None,
                  dtype=str(cfg.param_dtype), default=default_dispatch(cfg),
                  cache=cache, measure=measure, warmup=warmup, iters=iters,
                  backend=backend, **kw)
+
+
+def moe_tune_collective(cfg, params, x2d, ctx, *, dispatch=None,
+                        cache=None, measure=None, warmup=None, iters=None,
+                        backend=None):
+    """Tune the expert-parallel writeback collective on a *real* mesh
+    (DESIGN.md §12): measures ``apply_moe`` end to end under each
+    feasible mode ('nnz_ar' psum vs 'nnz_rs' psum_scatter, when the
+    local token count divides the model axis) and persists the winner —
+    a :class:`~repro.tune.MoeDispatchSchedule` carrying ``collective`` —
+    under a mesh-extent-suffixed key, so replays are measurement-free
+    and a different mesh re-tunes.  ``dispatch`` seeds the GEMM tiling
+    (default: the config's static point); like the wire mode on SpMM,
+    only the collective axis is searched here — the tiling axes belong
+    to :func:`moe_tune_dispatch`.
+
+    This lives at the models layer because the objective *is* the model
+    op (``repro.tune`` never imports ``repro.models``)."""
+    import jax as _jax
+
+    from ..tune.cache import default_cache, fingerprint_from_lengths
+    from ..tune.measure import time_fn
+    from ..tune.moe import moe_schedule_key
+    from ..tune.search import _Memo, _persist, _replay
+
+    if ctx is None or ctx.mesh is None or ctx.model_axis is None:
+        raise ValueError("moe_tune_collective needs a sharded ctx "
+                         "(mesh + model_axis)")
+    if cache is None:
+        cache = default_cache(backend)
+    base = (dispatch or default_dispatch(cfg)).replace(collective=None)
+    m_size = int(ctx.mesh.shape[ctx.model_axis])
+    t = int(x2d.shape[0])
+    d_size = int(functools.reduce(
+        lambda a, b: a * b, (ctx.mesh.shape[a] for a in ctx.data_axes), 1))
+    t_local = t // d_size
+
+    lengths = balanced_expert_lengths(cfg, t)
+    fp = fingerprint_from_lengths(lengths, (cfg.n_experts, cfg.d_model), t)
+    key = (f"moedist:{fp}|F{cfg.moe_d_ff}|{moe_schedule_key(base)}"
+           f"|mesh:{m_size}")
+    hit = _replay(cache, key)
+    if hit is not None:
+        return hit
+
+    if measure is None:
+        def measure(s):
+            fn = _jax.jit(
+                lambda xx: apply_moe(cfg, params, xx, ctx, dispatch=s)[0])
+            return time_fn(fn, x2d, warmup=warmup, iters=iters)
+
+    modes = ["nnz_ar"] + (["nnz_rs"] if t_local % m_size == 0 else [])
+    pool = [base.replace(collective=m) for m in modes]
+    memo = _Memo(measure, key_fn=moe_schedule_key)
+    best = min(pool, key=memo)
+    return _persist(cache, key, best, memo)
 
 
 def moe_dispatch_schedule(cfg, t_tokens: int, *, expert_lengths=None,

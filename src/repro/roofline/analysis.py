@@ -67,6 +67,50 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+def predict_collective_bytes(collective, out_shape, *, axis_size: int,
+                             itemsize: int = 4) -> int:
+    """Per-device collective result bytes a distributed reduction op
+    should compile to under ``collective`` (DESIGN.md §12) — the number
+    :func:`collective_bytes` reads back from the compiled HLO.
+
+    'row' (and ``None``) move nothing; 'nnz_ar' all-reduces the full
+    ``out_shape`` partial on every device; 'nnz_rs' reduce-scatters it,
+    so each device's collective *result* is the 1/P row slice it
+    finalizes — 1/P of the all-reduce bytes on the wire per shard.  A
+    1-member axis compiles its collectives away (0 bytes).
+    """
+    if axis_size <= 1 or collective in (None, "row"):
+        return 0
+    full = itemsize
+    for d in out_shape:
+        full *= int(d)
+    if collective == "nnz_ar":
+        return full
+    if collective == "nnz_rs":
+        return full // axis_size
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+def predict_attention_collective_bytes(collective, *, n_heads: int,
+                                       n_rows: int, dv_pad: int,
+                                       axis_size: int,
+                                       itemsize: int = 4) -> int:
+    """Collective result bytes of one distributed fused-attention combine
+    (``repro.sparse.dist_attention_shard_map``): the (H, R) row-max pmax
+    is always a full all-reduce; the weighted l and accumulator — (H, R)
+    and (H, R, dv_pad) — combine per ``collective`` like SpMM partials.
+    """
+    if axis_size <= 1 or collective in (None, "row"):
+        return 0
+    stats = n_heads * n_rows * itemsize  # pmax on m: always all-reduce
+    lw_acc = n_heads * n_rows * (dv_pad + 1) * itemsize
+    if collective == "nnz_rs":
+        lw_acc //= axis_size
+    elif collective != "nnz_ar":
+        raise ValueError(f"unknown collective {collective!r}")
+    return stats + lw_acc
+
+
 def extract_costs(compiled) -> dict:
     """Raw per-chip cost numbers from one compiled module. NOTE: XLA cost
     analysis counts a while/scan body ONCE (not × trip count); callers that

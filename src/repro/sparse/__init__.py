@@ -13,6 +13,15 @@ from ..core.schedule import (  # noqa: F401
     available_strategies,
     register_strategy,
 )
+from .distributed import (  # noqa: F401
+    COLLECTIVES,
+    dist_attention_shard_map,
+    dist_spmm,
+    partition_nnz_coo,
+    partition_rows_coo,
+    shard_nnz_counts,
+    spmm_shard_map,
+)
 from .formats import COO, CSR, ELL, GroupedCOO  # noqa: F401
 from .ops import sddmm, segment_reduce, sparse_attention, spmm  # noqa: F401
 from .random import (  # noqa: F401

@@ -43,9 +43,11 @@ from .calibrate import (  # noqa: F401
 )
 from .measure import (  # noqa: F401
     bench_iters,
+    make_dist_runner,
     make_eb_runner,
     make_rb_runner,
     make_runner,
+    measure_dist_schedule,
     measure_schedule,
     time_fn,
 )
@@ -63,6 +65,7 @@ from .search import (  # noqa: F401
     TuneResult,
     cached_or_auto,
     schedule_key,
+    tune_dist_spmm,
     tune_schedule,
     tune_segment_reduce,
 )

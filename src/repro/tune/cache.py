@@ -64,7 +64,11 @@ __all__ = [
 # 2: Schedule gained split/merge thresholds (skew-aware two-level
 # grouping, DESIGN.md §11) — pre-skew records are dropped on load (the
 # version gate below) so they re-tune against the enlarged space.
-SCHEMA_VERSION = 2
+# 3: Schedule (and MoeDispatchSchedule) gained the mesh-level
+# ``collective`` field (DESIGN.md §12); v2 records are dropped on load
+# so distributed workloads re-tune over the enlarged space instead of
+# replaying a record that silently pins the wire mode to None.
+SCHEMA_VERSION = 3
 
 _QUANTILES = (0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)
 

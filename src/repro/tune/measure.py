@@ -32,7 +32,9 @@ __all__ = [
     "make_eb_runner",
     "make_rb_runner",
     "make_runner",
+    "make_dist_runner",
     "measure_schedule",
+    "measure_dist_schedule",
 ]
 
 
@@ -192,4 +194,48 @@ def measure_schedule(csr, n_dense: int, sched: Schedule, *,
     """Seconds/call of ``sched`` applied to ``csr @ B`` with ``n_dense``
     dense columns — the tuner's objective function."""
     fn, args = make_runner(csr, n_dense, sched)
+    return time_fn(fn, *args, warmup=warmup, iters=iters)
+
+
+# ------------------------------------------------------------------------
+# Distributed measurement: the real shard_map program under a real mesh
+# ------------------------------------------------------------------------
+
+
+def make_dist_runner(csr, n_dense: int, sched: Schedule, *, mesh,
+                     axis: str, interpret: bool = True):
+    """Jitted (fn, args) running ``spmm_shard_map`` under ``sched`` on a
+    *real* mesh (the forced-host-device mesh in CI) — unlike the
+    single-device analogues there is no cheaper stand-in that still
+    observes the collective axis: the wire mode only exists in the
+    compiled SPMD program, so the objective is the program itself.
+    Partitioning (host-side) happens here, outside the timed region."""
+    from ..sparse.distributed import (partition_nnz_coo, partition_rows_coo,
+                                      spmm_shard_map)
+
+    axis_size = mesh.shape[axis]
+    if (sched.collective or "nnz_rs") == "row":
+        rows, cols, vals, _ = partition_rows_coo(csr, axis_size,
+                                                 sched.nnz_tile)
+    else:
+        rows, cols, vals, _ = partition_nnz_coo(csr, axis_size,
+                                                sched.nnz_tile)
+
+    def _run(r, c, v, b):
+        return spmm_shard_map(r, c, v, b, n_rows=csr.shape[0], mesh=mesh,
+                              axis=axis, schedule=sched,
+                              interpret=interpret)
+
+    args = (rows, cols, vals, _dense_b(csr, n_dense))
+    return _run, args
+
+
+def measure_dist_schedule(csr, n_dense: int, sched: Schedule, *, mesh,
+                          axis: str, warmup: int | None = None,
+                          iters: int | None = None,
+                          interpret: bool = True) -> float:
+    """Seconds/call of the distributed schedule point (local tiling +
+    ``sched.collective`` wire mode) — ``tune_dist_spmm``'s objective."""
+    fn, args = make_dist_runner(csr, n_dense, sched, mesh=mesh, axis=axis,
+                                interpret=interpret)
     return time_fn(fn, *args, warmup=warmup, iters=iters)

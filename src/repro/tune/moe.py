@@ -74,12 +74,21 @@ class MoeDispatchSchedule:
     capacity_factor  per-expert capacity multiplier (capacity =
                      mean routed tokens per expert × factor).
     f_tile, d_tile   GEMM blocking of the expert weight (D, F) axes.
+    collective       expert-parallel writeback mode (DESIGN.md §12):
+                     ``None`` keeps the deployment default ('nnz_ar'),
+                     'nnz_ar' all-reduces the partial token block
+                     (atomic-style psum), 'nnz_rs' reduce-scatters it so
+                     each model shard finalizes a token slice.  'row'
+                     has no expert-parallel analogue — every expert's
+                     partial covers all local tokens, so a combine is
+                     mandatory.
     """
 
     token_tile: int = 128
     capacity_factor: float = 1.25
     f_tile: int = 128
     d_tile: int = 128
+    collective: Optional[str] = None
 
     def __post_init__(self):
         for name in ("token_tile", "f_tile", "d_tile"):
@@ -89,6 +98,10 @@ class MoeDispatchSchedule:
         if not self.capacity_factor > 0:
             raise ValueError("capacity_factor must be positive, "
                              f"got {self.capacity_factor!r}")
+        if self.collective not in (None, "nnz_ar", "nnz_rs"):
+            raise ValueError(
+                f"unknown collective {self.collective!r}; MoE dispatch "
+                "knows 'nnz_ar', 'nnz_rs' (or None for the default)")
 
     def replace(self, **kw) -> "MoeDispatchSchedule":
         """Copy with the given fields replaced (re-validates)."""
@@ -96,9 +109,12 @@ class MoeDispatchSchedule:
 
 
 def moe_schedule_key(s: MoeDispatchSchedule) -> str:
-    """Stable string identity of a dispatch point (JSON-safe dict key)."""
+    """Stable string identity of a dispatch point (JSON-safe dict key).
+    The collective mode is part of the identity — the same GEMM tiling
+    under psum and psum_scatter are different SPMD programs."""
+    wire = "" if s.collective is None else f":w[{s.collective}]"
     return (f"moe:tt{s.token_tile}:cf{s.capacity_factor:g}"
-            f":f{s.f_tile}:d{s.d_tile}")
+            f":f{s.f_tile}:d{s.d_tile}{wire}")
 
 
 def moe_cache_key(expert_lengths, d_model: int, d_ff: int,

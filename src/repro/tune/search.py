@@ -26,16 +26,18 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from ..core import Schedule, candidate_schedules, predict_cost, select_schedule
+from ..core import (COLLECTIVES, Schedule, candidate_schedules, predict_cost,
+                    predict_dist_cost, select_schedule)
 from ..kernels.ops import schedule_fits_vmem
 from ..sparse.random import matrix_stats
 from .cache import ScheduleCache, TuneRecord, cache_key, default_cache
-from .measure import measure_schedule, time_fn
+from .measure import measure_dist_schedule, measure_schedule, time_fn
 
 __all__ = [
     "TuneResult",
     "cached_or_auto",
     "schedule_key",
+    "tune_dist_spmm",
     "tune_schedule",
     "tune_segment_reduce",
 ]
@@ -46,13 +48,16 @@ def schedule_key(s: Schedule) -> str:
 
     Skew thresholds are part of the identity: a skew-partitioned point
     measures a different program than the plain point with the same
-    tiling, so they must not share a memo/cache slot."""
+    tiling, so they must not share a memo/cache slot.  So is the
+    collective mode (DESIGN.md §12): the same local tiling under
+    all-reduce and reduce-scatter are different distributed programs."""
     tile = s.nnz_tile if s.kernel == "eb" else s.row_tile
     ep = "" if s.epilogue.is_noop else f":ep[{s.epilogue.tag}]"
     skew = (f":s{s.split_threshold}:m{s.merge_threshold}"
             if s.is_skew else "")
+    wire = "" if s.collective is None else f":w[{s.collective}]"
     return (f"{s.kernel}:t{tile}:c{s.col_tile}:G{s.group_size}"
-            f":{s.strategy}{skew}{ep}")
+            f":{s.strategy}{skew}{wire}{ep}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -386,4 +391,101 @@ def tune_segment_reduce(
             for g in (8, 32)
             for st in ("segment", "accumulate")]
     best = min(pool, key=memo)
+    return _persist(cache, key, best, memo)
+
+
+# ---------------------------------------------------------------------------
+# Distributed tuning: one search over (local tiling × collective mode)
+# ---------------------------------------------------------------------------
+
+
+def _feasible_collectives(stats: dict, axis_size: int) -> List[str]:
+    """Collective modes the mesh/shape combination can realize: 'nnz_ar'
+    always works; 'row' and 'nnz_rs' finalize a row block per shard, so
+    they need ``n_rows % axis_size == 0`` (DESIGN.md §12)."""
+    modes = ["nnz_ar"]
+    if axis_size <= 1 or stats["n_rows"] % axis_size == 0:
+        modes += ["nnz_rs", "row"]
+    return modes
+
+
+def tune_dist_spmm(
+    csr,
+    n_dense_cols: int,
+    *,
+    mesh,
+    axis: str,
+    cache: Optional[ScheduleCache] = None,
+    top_k: int = 2,
+    hill_steps: int = 2,
+    measure: Optional[Callable[[Schedule], float]] = None,
+    warmup: Optional[int] = None,
+    iters: Optional[int] = None,
+    backend: Optional[str] = None,
+    interpret: bool = True,
+) -> TuneResult:
+    """One empirical search over (kernel tiling × collective mode) for a
+    sharded ``csr @ B`` on ``mesh`` — the tentpole of DESIGN.md §12: the
+    wire strategy is a :class:`Schedule` axis, not a separate knob, so
+    the tuner can trade local tile shape against collective bytes in a
+    single objective (``measure_dist_schedule`` times the real shard_map
+    program).
+
+    Candidates are the top-ranked *local* eb tilings (the shard-local
+    kernel only takes the eb path) crossed with every feasible collective
+    mode, pre-ranked by :func:`~repro.core.predict_dist_cost` — the
+    per-shard cost model plus the ``WIRE_COST_WEIGHT`` wire term and the
+    ``shard_nnz`` straggler factor — then measured; a short hillclimb
+    refines the winner's local axes with the collective held fixed (a
+    collective flip re-partitions the operands, so it is a pool move,
+    not a neighbor move).  The cache key folds in the mesh extent:
+    ``dist:<fingerprint>|mesh:<P>`` — the same matrix on a different
+    mesh is a different tuning problem.
+    """
+    axis_size = int(mesh.shape[axis])
+    if cache is None:
+        cache = default_cache(backend)
+    key = f"dist:{cache_key(csr, n_dense_cols)}|mesh:{axis_size}"
+    hit = _replay(cache, key)
+    if hit is not None:
+        return hit
+
+    from ..sparse.distributed import shard_nnz_counts
+
+    stats = matrix_stats(csr)
+    if measure is None:
+        def measure(s: Schedule) -> float:
+            return measure_dist_schedule(csr, n_dense_cols, s, mesh=mesh,
+                                         axis=axis, warmup=warmup,
+                                         iters=iters, interpret=interpret)
+
+    modes = _feasible_collectives(stats, axis_size)
+    eb = [s for s in _feasible(candidate_schedules(n_dense_cols), stats)
+          if s.kernel == "eb"]
+    eb.sort(key=lambda s: predict_cost(stats, s, n_dense_cols))
+    auto = select_schedule(stats, n_dense_cols)
+    seeds = ([auto] if auto.kernel == "eb" else []) + eb[:max(1, top_k)]
+    pool: List[Schedule] = []
+    for s in seeds:
+        for mode in modes:
+            cand = s.replace(collective=mode)
+            if cand not in pool:
+                pool.append(cand)
+    pool.sort(key=lambda s: predict_dist_cost(
+        stats, s, n_dense_cols, axis_size=axis_size,
+        shard_nnz=shard_nnz_counts(csr, axis_size, s.collective)))
+
+    memo = _Memo(measure)
+    best = min(pool, key=memo)
+
+    for _ in range(hill_steps):
+        nbs = [s for s in _feasible(_neighbors(best), stats)
+               if s.collective in COLLECTIVES and not memo.seen(s)]
+        if not nbs:
+            break
+        contender = min(nbs, key=memo)
+        if memo(contender) >= memo(best):
+            break
+        best = contender
+
     return _persist(cache, key, best, memo)

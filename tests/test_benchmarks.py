@@ -46,6 +46,7 @@ def test_error_row_exits_nonzero_and_reports(monkeypatch, capsys, tmp_path):
     rows = json.loads(out_json.read_text())
     assert rows["table1"]["us_per_call"] is None
     assert rows["table1"]["derived"].startswith("ERROR:")
+    assert rows["table1"]["status"] == "error"
 
 
 def test_only_filter_runs_exactly_the_named_benches(monkeypatch, capsys):
@@ -76,6 +77,62 @@ def test_only_filter_rejects_unknown_names(monkeypatch, capsys):
     with pytest.raises(SystemExit) as exc:
         _run_main(monkeypatch, ["--only", "not_a_bench"])
     assert exc.value.code == 2  # argparse usage error
+
+
+def test_resolve_only_expands_tags_and_normalizes():
+    """``--only`` entries are bench names first, else tags, with '-' and
+    '_' interchangeable in both (CI invokes ``--only ci-smoke``)."""
+    smoke, unknown = bench_run.resolve_only(["ci-smoke"])
+    assert not unknown
+    assert smoke == [n for n, (_, _, t) in bench_run.BENCHES.items()
+                     if "ci_smoke" in t]
+    assert "table5" in smoke and "table2" not in smoke
+
+    dist, unknown = bench_run.resolve_only(["dist"])
+    assert not unknown
+    assert set(dist) == {"dist_attention", "dist_moe"}
+
+    # a bench name wins over tag lookup, and hyphens normalize
+    names, unknown = bench_run.resolve_only(["dist-attention", "table1"])
+    assert not unknown and names == ["table1", "dist_attention"]
+
+    _, unknown = bench_run.resolve_only(["nope", "table1"])
+    assert unknown == ["nope"]
+
+
+def test_dist_benches_are_dual_lane():
+    """The dist benches run in BOTH lanes: degenerate 1-device rows in
+    the smoke lane, real 8-way rows in the dist lane (separate
+    trajectories never cross-compare)."""
+    for name in ("dist_attention", "dist_moe"):
+        _, _, tags = bench_run.BENCHES[name]
+        assert {"ci_smoke", "dist"} <= tags
+
+
+def test_default_diff_groups_are_ci_smoke_tagged():
+    """Every group the diff gate tracks by default must be produced by a
+    ci_smoke-tagged bench, else the smoke artifact silently stops
+    carrying the rows the gate wants to compare."""
+    for group in bench_diff.DEFAULT_GROUPS:
+        name = group.split("/", 1)[-1] if group.startswith("beyond/") \
+            else group
+        assert name in bench_run.BENCHES, (group, name)
+        _, _, tags = bench_run.BENCHES[name]
+        assert "ci_smoke" in tags, (group, name)
+
+
+def test_json_rows_carry_ok_status(monkeypatch, capsys, tmp_path):
+    """Success rows get ``status: ok`` — the machine-readable flag the
+    CI lanes gate on instead of grepping the CSV for "ERROR"."""
+    from benchmarks import tables
+
+    monkeypatch.setattr(tables, "table1_group_size",
+                        lambda quick: [("table1/row", 2.0, "fine")])
+    out_json = tmp_path / "bench.json"
+    _run_main(monkeypatch, ["--only", "table1", "--json", str(out_json)])
+    rows = json.loads(out_json.read_text())
+    assert rows["table1/row"]["status"] == "ok"
+    assert rows[bench_run.PROBE_ROW]["status"] == "ok"
 
 
 # ---------------------------------------------------------------------------

@@ -1,34 +1,19 @@
 """Distributed tests: run in a subprocess with 8 forced host devices so the
-main pytest process keeps its single-device view.
+main pytest process keeps its single-device view.  The forced-device
+environment (and the device-count assertion) lives in
+``conftest.run_distributed`` — snippets here contain only the test.
 """
-import os
-import pathlib
-import subprocess
-import sys
-
 import jax
 import pytest
+
+from conftest import run_distributed as _run
 
 if not hasattr(jax.sharding, "AxisType"):
     pytest.skip("jax.sharding.AxisType unavailable in this jax version",
                 allow_module_level=True)
 
-SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
-
-
-def _run(code: str, timeout=600):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = SRC
-    env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=timeout, env=env)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    return r.stdout
-
 
 DISTRIBUTED_SPMM = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.sparse import random_csr, GroupedCOO
@@ -73,8 +58,6 @@ print("row OK")
 
 
 MOE_EP = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import ARCHS, smoke_config
 from repro.models.moe import apply_moe, init_moe, ShardingCtx
@@ -98,8 +81,6 @@ print("moe EP OK, agreement", close)
 
 
 SEQ_SHARDED_DECODE = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCHS, smoke_config
@@ -149,8 +130,6 @@ def test_seq_sharded_kv_decode_matches_single():
 
 
 SEQ_PARALLEL_ATTENTION = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import ARCHS, smoke_config
 from repro.models import get_model
@@ -186,8 +165,6 @@ def test_seq_parallel_attention_matches_single():
 
 
 ELASTIC_REMESH = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np, tempfile
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCHS, smoke_config
