@@ -11,7 +11,7 @@ from repro.core import select_schedule
 from repro.models.moe import apply_moe, init_moe
 from repro.sparse.random import matrix_stats
 
-from ._util import geomean, suite, time_fn
+from ._util import geomean, make_runner, suite, time_fn
 
 
 def moe_dispatch(quick=True):
@@ -517,6 +517,72 @@ def dist_moe_gap(quick=True):
                  f"tuned={res.schedule.collective},"
                  f"fixed_us={t_fixed:.1f},"
                  f"tuned_vs_fixed_geomean={win:.3f}"))
+    return rows
+
+
+def lowprec_spmm(quick=True):
+    """Low-precision value storage as a schedule axis (ISSUE 9,
+    DESIGN.md §13): f32 vs bf16 vs int8 SpMM on the same patterns.
+
+    Two numbers per (matrix, dtype), from the same jitted schedule
+    analogue the tuner measures (narrow arrays genuinely fed):
+
+    * ``us`` — XLA-CPU wall clock.  Honest but a poor proxy for the
+      paper's hardware: this backend converts bf16 through a scalar
+      path, so the bandwidth saving does not reach the clock here.
+    * modeled traffic bytes (``roofline.predict_spmm_traffic_bytes``)
+      — the gather-dominated stream model a bandwidth-bound backend
+      realizes; the headline ``modeled_speedup`` geomeans come from it
+      (bf16 ~2x fewer bytes than f32 on these shapes).
+
+    The tuner's parity gate is reported alongside (``err``): every
+    narrow row shown is within the 5% default ``error_budget``.
+    """
+    from repro.core import Schedule
+    from repro.roofline.analysis import predict_spmm_traffic_bytes
+    from repro.sparse.random import power_law_csr, random_csr
+    from repro.tune.search import _dtype_parity_error
+
+    n = 4096 if quick else 16384
+    C = 64
+    mats = [("uniform", random_csr(n, n, density=0.004, seed=0)),
+            ("powerlaw", power_law_csr(n, n, avg_degree=16.0, alpha=1.8,
+                                       seed=1))]
+    base = Schedule("eb", nnz_tile=512, group_size=32,
+                    strategy="accumulate", col_tile=C)
+
+    rows = []
+    ratios = {"bfloat16": {"us": [], "bytes": []},
+              "int8": {"us": [], "bytes": []}}
+    for name, csr in mats:
+        per = {}
+        for vd in (None, "bfloat16", "int8"):
+            fn, args = make_runner(csr, C, base.replace(value_dtype=vd))
+            lanes = args[0].shape[0]
+            t = time_fn(fn, *args, warmup=1, iters=3) * 1e6
+            by = predict_spmm_traffic_bytes(
+                lanes, csr.shape[0], C, value_dtype=vd,
+                scales_rows=csr.shape[0] if vd == "int8" else 0)
+            per[vd] = (t, by)
+        t32, b32 = per[None]
+        rows.append((f"beyond/lowprec/{name}/f32", t32,
+                     f"modeled_mb={b32 / 1e6:.1f},nnz={csr.nnz}"))
+        for vd in ("bfloat16", "int8"):
+            t, by = per[vd]
+            err = _dtype_parity_error(csr, C, vd)
+            ratios[vd]["us"].append(t32 / max(t, 1e-9))
+            ratios[vd]["bytes"].append(b32 / by)
+            rows.append((f"beyond/lowprec/{name}/{vd}", t,
+                         f"modeled_mb={by / 1e6:.1f},"
+                         f"modeled_speedup={b32 / by:.2f},"
+                         f"us_vs_f32={t32 / max(t, 1e-9):.2f},"
+                         f"err={err:.4f}"))
+    rows.append((
+        "beyond/lowprec_spmm", 0.0,
+        f"modeled_speedup_geomean_bf16={geomean(ratios['bfloat16']['bytes']):.2f},"
+        f"modeled_speedup_geomean_int8={geomean(ratios['int8']['bytes']):.2f},"
+        f"us_geomean_bf16={geomean(ratios['bfloat16']['us']):.2f},"
+        f"us_geomean_int8={geomean(ratios['int8']['us']):.2f}"))
     return rows
 
 

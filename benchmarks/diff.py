@@ -62,7 +62,8 @@ import sys
 # green; thereafter a >threshold normalized slowdown fails.
 DEFAULT_GROUPS = ("table5", "beyond/fused_attention_bwd",
                   "beyond/fusion_planner", "beyond/skew",
-                  "beyond/dist_attention", "beyond/dist_moe")
+                  "beyond/lowprec", "beyond/dist_attention",
+                  "beyond/dist_moe")
 DEFAULT_WINDOW = 5
 PROBE_ROW = "probe/runner_speed"
 TRAJECTORY_VERSION = 1

@@ -61,6 +61,7 @@ BENCHES = {
     "fused_attention_bwd": ("beyond", "fused_attention_bwd", {"ci_smoke"}),
     "fusion_planner": ("beyond", "fusion_planner", {"ci_smoke"}),
     "skew": ("beyond", "skew_tuner_gap", {"ci_smoke"}),
+    "lowprec": ("beyond", "lowprec_spmm", {"ci_smoke"}),
     "dist_attention": ("beyond", "dist_attention_gap",
                        {"ci_smoke", "dist"}),
     "dist_moe": ("beyond", "dist_moe_gap", {"ci_smoke", "dist"}),

@@ -173,4 +173,31 @@ np.testing.assert_allclose(np.asarray(out_d),
 res_d = tune_dist_spmm(G, 4, mesh=mesh, axis="shards", cache=cache)
 print("distributed spmm matches oracle: OK | tuned collective:",
       res_d.schedule.collective, "| cached replay:", res_d.from_cache)
+
+# 8. Low-precision value storage (DESIGN.md §13): the stored dtype is
+#    itself a schedule axis.  Values stream as bf16/fp16/fp8 — or int8
+#    with per-row scales dequantized inside the reduction — while
+#    accumulation stays f32.  schedule='tune' measures narrow variants
+#    of the winning schedule and keeps one only when it is faster AND
+#    inside a relative-error budget; on hosts without native fp8 the
+#    fp8 dtypes degrade to bf16 with a warning instead of failing.
+from repro.core import fp8_supported  # noqa: E402
+from repro.sparse import quantize_csr  # noqa: E402
+
+s16 = Schedule("eb", nnz_tile=256, col_tile=8, group_size=8,
+               strategy="segment", value_dtype="bfloat16")
+out16 = spmm(A, B, schedule=s16)
+err16 = float(jnp.linalg.norm(out16 - ref) / jnp.linalg.norm(ref))
+print(f"bf16 storage, f32 accumulation: rel err {err16:.1e}")
+
+qA = quantize_csr(A)  # int8 values + per-row f32 scales
+qerr = float(np.abs(np.asarray(qA.dequantize().vals)
+                    - np.asarray(A.vals)).max())
+print(f"int8 per-row quantization round-trip: max abs err {qerr:.1e}")
+
+cache8 = ScheduleCache(path=None)
+res8 = tune_schedule(A, 8, cache=cache8, warmup=0, iters=1,
+                     value_dtypes=("bfloat16", "int8"))
+print("tuned with dtype axis:", res8.schedule.value_dtype or "float32",
+      "| fp8 native here:", fp8_supported())
 print("done")

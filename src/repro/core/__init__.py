@@ -9,6 +9,16 @@ from .atomic_parallelism import (  # noqa: F401
     is_legal,
     to_schedule,
 )
+from .dtypes import (  # noqa: F401
+    VALUE_DTYPES,
+    Fp8Fallback,
+    canonical_value_dtype,
+    fp8_supported,
+    operand_dtype,
+    operand_itemsize,
+    storage_dtype,
+    value_itemsize,
+)
 from .schedule import (  # noqa: F401
     ACTIVATIONS,
     COLLECTIVES,

@@ -38,6 +38,8 @@ import dataclasses
 import inspect
 from typing import Callable, Dict, Optional, Tuple
 
+from .dtypes import canonical_value_dtype
+
 from .segment_group import (
     MONOIDS,
     GroupReduceStrategy,
@@ -443,6 +445,17 @@ class Schedule:
     its row slice, moving 1/P of the all-reduce bytes).  The distributed
     tuner searches it alongside the kernel tiling and cached records
     replay it measurement-free.
+
+    value_dtype (DESIGN.md §13) is the storage-precision axis: the dtype
+    the CSR value stream (and the gathered dense operand) is *moved* in.
+    ``None`` (default) keeps float32; 'bfloat16'/'float16'/
+    'float8_e4m3fn' store values narrow (fp8 degrades to bf16 with a
+    warning on jax builds without the type); 'int8' selects the
+    quantized value path (per-row scales, dequant fused into the
+    reduction).  Accumulation is always f32 regardless (the
+    ``upcast_f32`` contract), so this axis trades operand *bandwidth*
+    for precision — the empirical tuner searches it under a parity-error
+    budget and cached records replay it measurement-free.
     """
 
     kernel: str = "eb"
@@ -455,6 +468,7 @@ class Schedule:
     split_threshold: Optional[int] = None
     merge_threshold: Optional[int] = None
     collective: Optional[str] = None
+    value_dtype: Optional[str] = None
 
     def __post_init__(self):
         if self.kernel not in ("eb", "rb"):
@@ -488,6 +502,10 @@ class Schedule:
             raise ValueError(
                 f"unknown collective {self.collective!r}; known: "
                 f"{sorted(COLLECTIVES)} (or None for single-device)")
+        # normalizes aliases ('bf16') and float32 -> None; raises on
+        # unsupported names so a typo'd axis value fails at construction
+        object.__setattr__(self, "value_dtype",
+                           canonical_value_dtype(self.value_dtype))
 
     @property
     def is_skew(self) -> bool:
@@ -607,9 +625,11 @@ class Schedule:
                    f"/merge<={self.merge_threshold}")
         wire = ("" if self.collective is None
                 else f", collective={self.collective}")
+        vd = ("" if self.value_dtype is None
+              else f", value_dtype={self.value_dtype}")
         return (f"Schedule({self.kernel}, {tile}, col_tile={self.col_tile}, "
                 f"G={self.group_size}, strategy={self.strategy}{sk}{wire}"
-                f"{ep})")
+                f"{vd}{ep})")
 
 
 def _lcm_tile(tile: int, group: int) -> int:

@@ -108,6 +108,12 @@ def cost_terms(stats: Dict, sched: Schedule,
     waste and writeback pull G in opposite directions, so the
     waste:writeback weight ratio (calibratable — ``repro.tune``) decides
     the group size, exactly the machine-dependent trade the paper tunes.
+
+    A narrow ``sched.value_dtype`` (DESIGN.md §13) rescales the two
+    traffic-shaped terms by itemsize/4: gather by the *operand* width
+    (B is read at the operand dtype) and waste by the *storage* width
+    (padding lanes move value-stream bytes).  work and writeback are
+    unchanged — accumulation and output stay f32.
     """
     nnz = max(1, stats["nnz"])
     C = max(1, n_dense_cols)
@@ -133,6 +139,11 @@ def cost_terms(stats: Dict, sched: Schedule,
         rows_touched = nnz / row_mean
         writeback = (rows_touched + groups) * C
     gather = nnz * min(C, sched.col_tile)
+    if sched.value_dtype is not None:
+        from .dtypes import operand_itemsize, value_itemsize
+
+        waste *= value_itemsize(sched.value_dtype) / 4.0
+        gather *= operand_itemsize(sched.value_dtype) / 4.0
     return (float(work), float(waste), float(writeback), float(gather))
 
 

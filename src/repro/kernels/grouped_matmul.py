@@ -32,7 +32,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.schedule import Epilogue
-from .common import apply_epilogue, split_epilogue_refs
+from .common import apply_epilogue, split_epilogue_refs, upcast_f32
 
 _NOOP = Epilogue()
 
@@ -60,8 +60,9 @@ def _gmm_kernel(epilogue: Epilogue, narrowed: bool,
     def _init():
         acc[...] = jnp.zeros_like(acc)
 
-    x = x_ref[...].astype(jnp.float32)  # (TT, DT)
-    w = w_ref[...].astype(jnp.float32)[0]  # (DT, FT)
+    # narrow (bf16/fp8) storage upcasts here; accumulation is f32
+    x, w3 = upcast_f32(x_ref[...], w_ref[...])  # (TT, DT), (1, DT, FT)
+    w = w3[0]  # (DT, FT)
     acc[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     if not epilogue.is_noop or narrowed:

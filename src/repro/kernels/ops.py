@@ -9,8 +9,16 @@ import numpy as np
 
 import jax
 
+from ..core.dtypes import operand_dtype, operand_itemsize, storage_dtype
 from ..core.schedule import ACTIVATIONS, Epilogue, Schedule
-from ..sparse.formats import CSR, ELL, GroupedCOO, round_up
+from ..sparse.formats import (
+    CSR,
+    ELL,
+    GroupedCOO,
+    QuantizedCSR,
+    _memoized,
+    round_up,
+)
 from . import ref
 from .grouped_matmul import grouped_matmul as _gmm_pallas
 from .sddmm import sddmm as _sddmm_kernel
@@ -55,11 +63,16 @@ def vmem_footprint_rb(k, width, sched: Schedule, itemsize=4,
 
 
 def schedule_fits_vmem(sched: Schedule, *, n_rows: int, n_cols: int,
-                       row_max: int = 0, itemsize: int = 4,
+                       row_max: int = 0, itemsize: int | None = None,
                        budget: int = _VMEM_BYTES) -> bool:
     """Whether a schedule's per-cell working set fits the VMEM budget —
     the feasibility predicate the autotuner prunes candidates with before
-    spending measurement time on them."""
+    spending measurement time on them.  ``itemsize=None`` derives the
+    element width from the schedule's ``value_dtype`` (the B block and
+    its gathered expansion dominate the cell, so the operand width is
+    the honest bound)."""
+    if itemsize is None:
+        itemsize = operand_itemsize(sched.value_dtype)
     if sched.kernel == "eb":
         need = vmem_footprint_eb(n_cols, n_rows, sched, itemsize)
     else:
@@ -81,11 +94,20 @@ def _pad_epilogue_operands(ep, bias, residual, n_rows, n_pad):
     return bias_p, res_p
 
 
+def _cast_stream(fmt, vals, dt):
+    """Memoized cast of a format's value stream to storage dtype ``dt``
+    (keyed on the format instance, so a serving loop casts once)."""
+    if vals.dtype == dt:
+        return vals
+    return _memoized(fmt, (vals,), ("vals_astype", str(jnp.dtype(dt))),
+                     lambda: vals.astype(dt))
+
+
 def spmm(a, b, schedule: Schedule | None = None, *,
          bias=None, residual=None, impl: str = "pallas",
          interpret: bool = True):
-    """out = A @ B for sparse A (CSR / GroupedCOO / ELL) and dense B,
-    with the schedule's fused epilogue applied in-kernel.
+    """out = A @ B for sparse A (CSR / QuantizedCSR / GroupedCOO / ELL)
+    and dense B, with the schedule's fused epilogue applied in-kernel.
 
     impl='ref' runs the pure-jnp oracle (epilogue applied via its
     executable spec); impl='pallas' runs the kernel the schedule selects
@@ -93,6 +115,13 @@ def spmm(a, b, schedule: Schedule | None = None, *,
     the per-(format, tile) cache on CSR.  ``bias`` (N,) / ``residual``
     (n_rows, N) are required exactly when ``schedule.epilogue`` declares
     them.
+
+    ``schedule.value_dtype`` (DESIGN.md §13) selects the storage width
+    the kernel *moves*: narrow floats cast the value stream and B to
+    that dtype (memoized per instance); 'int8' routes through the
+    quantized path — a CSR is quantized once (per-row scales, memoized),
+    a :class:`QuantizedCSR` feeds its codes directly, and B narrows to
+    bf16.  Accumulation stays f32 either way (``upcast_f32``).
     """
     if schedule is None:
         schedule = Schedule("eb")
@@ -105,6 +134,8 @@ def spmm(a, b, schedule: Schedule | None = None, *,
                          "no residual array was passed")
 
     if impl == "ref":
+        if isinstance(a, QuantizedCSR):
+            a = a.dequantize()
         if isinstance(a, GroupedCOO):
             out = ref.spmm_coo_ref(a.rows, a.cols, a.vals, b, a.shape[0])
         elif isinstance(a, CSR):
@@ -119,6 +150,22 @@ def spmm(a, b, schedule: Schedule | None = None, *,
             return out
         return ep.apply(out, bias=bias, residual=residual)
 
+    vd = schedule.value_dtype
+    scales = None
+    if isinstance(a, QuantizedCSR) or vd == "int8":
+        if isinstance(a, CSR):
+            a = a.quantized()  # memoized host-side calibration pass
+        if not isinstance(a, QuantizedCSR):
+            raise TypeError(
+                "value_dtype='int8' needs a CSR or QuantizedCSR input "
+                "(the per-row scales are a CSR-level calibration); got "
+                f"{type(a).__name__}")
+        scales = a.scales
+        a = a.csr  # int8 codes on the original pattern
+        b = b.astype(operand_dtype("int8"))
+    elif vd is not None:
+        b = b.astype(operand_dtype(vd))
+
     col_tile = min(schedule.col_tile, round_up(b.shape[1], 8))
     b_pad, n = _pad_cols(b, col_tile)
     n_pad = b_pad.shape[1]
@@ -131,14 +178,16 @@ def spmm(a, b, schedule: Schedule | None = None, *,
             a = a.grouped(schedule.nnz_tile, **skew_kw)
         assert isinstance(a, GroupedCOO), type(a)
         a = a.regrouped(schedule.nnz_tile, **skew_kw)  # memoized; no-op
+        vals = (a.vals if vd is None or scales is not None
+                else _cast_stream(a, a.vals, storage_dtype(vd)))
         bias_p, res_p = _pad_epilogue_operands(ep, bias, residual,
                                                a.shape[0], n_pad)
         out = _spmm_eb(
-            a.rows, a.cols, a.vals, b_pad, n_rows=a.shape[0],
+            a.rows, a.cols, vals, b_pad, n_rows=a.shape[0],
             nnz_tile=schedule.nnz_tile, col_tile=col_tile,
             group_size=schedule.group_size, strategy=schedule.strategy,
-            heavy_tiles=a.heavy_tiles, epilogue=ep, bias=bias_p,
-            residual=res_p, interpret=interpret)
+            heavy_tiles=a.heavy_tiles, epilogue=ep, scales=scales,
+            bias=bias_p, residual=res_p, interpret=interpret)
         return out[:, :n]
 
     # rb path
@@ -147,14 +196,22 @@ def spmm(a, b, schedule: Schedule | None = None, *,
     assert isinstance(a, ELL), type(a)
     r_pad = round_up(a.n_rows_padded, schedule.row_tile)
     ecols, evals = a.cols, a.vals
+    if vd is not None and scales is None:
+        evals = _cast_stream(a, evals, storage_dtype(vd))
     if r_pad != a.n_rows_padded:
         pad = r_pad - a.n_rows_padded
         ecols = jnp.pad(ecols, ((0, pad), (0, 0)))
         evals = jnp.pad(evals, ((0, pad), (0, 0)))
+    scales_p = None
+    if scales is not None:
+        # per-row scales aligned to the padded row axis; padded rows
+        # carry val 0, so the filler scale value is never observable
+        scales_p = jnp.pad(scales, (0, r_pad - scales.shape[0]),
+                           constant_values=1.0)
     bias_p, res_p = _pad_epilogue_operands(ep, bias, residual, r_pad, n_pad)
     out = _spmm_rb(ecols, evals, b_pad, row_tile=schedule.row_tile,
-                   col_tile=col_tile, epilogue=ep, bias=bias_p,
-                   residual=res_p, interpret=interpret)
+                   col_tile=col_tile, epilogue=ep, scales=scales_p,
+                   bias=bias_p, residual=res_p, interpret=interpret)
     return out[: a.shape[0], :n]
 
 

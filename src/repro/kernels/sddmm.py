@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import upcast_f32
+
 
 def _sddmm_kernel(*refs, has_scale: bool):
     if has_scale:
@@ -36,8 +38,8 @@ def _sddmm_kernel(*refs, has_scale: bool):
 
     rows = rows_ref[...]
     cols = cols_ref[...]
-    a = a_ref[...].astype(jnp.float32)  # (M, Dt)
-    b = b_ref[...].astype(jnp.float32)  # (N, Dt)
+    # narrow (bf16/fp8) operands upcast here; the dot accumulates in f32
+    a, b = upcast_f32(a_ref[...], b_ref[...])  # (M, Dt), (N, Dt)
     ga = jnp.take(a, rows, axis=0)  # (T, Dt)
     gb = jnp.take(b, cols, axis=0)  # (T, Dt)
     out_ref[...] += jnp.sum(ga * gb, axis=-1)
@@ -45,7 +47,7 @@ def _sddmm_kernel(*refs, has_scale: bool):
     if scale_ref is not None:
         @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
         def _scale():
-            out_ref[...] *= scale_ref[...].astype(jnp.float32)
+            out_ref[...] *= upcast_f32(scale_ref[...])
 
 
 @functools.partial(

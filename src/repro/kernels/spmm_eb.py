@@ -31,14 +31,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.schedule import Epilogue
-from .common import apply_epilogue, group_reduce_scatter, split_epilogue_refs
+from .common import (
+    apply_epilogue,
+    group_reduce_scatter,
+    split_epilogue_refs,
+    upcast_f32,
+)
 
 _NOOP = Epilogue()
 
 
 def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, *refs,
                     group_size: int, strategy: str, heavy_tiles: int,
-                    epilogue: Epilogue, narrowed: bool):
+                    epilogue: Epilogue, narrowed: bool, quantized: bool):
+    if quantized:
+        scales_ref, *refs = refs
     bias_ref, res_ref, out_ref, acc_ref = split_epilogue_refs(
         refs, epilogue, narrowed)
     # out_dtype narrowing: accumulate in the f32 scratch, cast only at
@@ -51,8 +58,16 @@ def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, *refs,
 
     rows = rows_ref[...]
     cols = cols_ref[...]
-    vals = vals_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
+    # storage may be narrow (bf16/fp8) or int8 codes — all arithmetic is
+    # f32 from here on (the upcast_f32 accumulation contract)
+    vals = upcast_f32(vals_ref[...])
+    b = upcast_f32(b_ref[...])
+    if quantized:
+        # per-lane dequant *before* the segment reduce: scales are
+        # per-row (segment-aligned), so partials combine exactly as in
+        # the f32 kernel and the scatter stays monoid-correct.  Padded
+        # lanes gather the pad row's scale with val 0 — still zero.
+        vals = vals * jnp.take(upcast_f32(scales_ref[...]), rows)
 
     gathered = jnp.take(b, cols, axis=0)  # (T, C)
     partial = gathered * vals[:, None]
@@ -87,7 +102,7 @@ def _spmm_eb_kernel(rows_ref, cols_ref, vals_ref, b_ref, *refs,
 def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
             col_tile: int = 128, group_size: int = 32,
             strategy: str = "segment", heavy_tiles: int = 0,
-            epilogue: Epilogue = _NOOP,
+            epilogue: Epilogue = _NOOP, scales=None,
             bias=None, residual=None, interpret: bool = True):
     """out (n_rows, N) = scatter-reduce over padded COO triplets × B,
     with the fused ``epilogue`` applied to each output block on its last
@@ -100,6 +115,12 @@ def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
     ``GroupedCOO``'s metadata) marks the leading nnz tiles whose groups
     are single-row by construction: those run the 'parallel' realization
     regardless of ``strategy`` (DESIGN.md §11).
+
+    ``scales`` (n_rows,) f32, when given, selects the quantized value
+    path (DESIGN.md §13): ``vals`` holds int8 codes and every lane is
+    dequantized ``val * scales[row]`` before the segment reduce.  The
+    scale vector stays resident in VMEM across nnz steps (constant index
+    map) — the dequant adds no per-nnz HBM traffic.
     """
     nnz_pad = vals.shape[0]
     k, n = b.shape
@@ -113,6 +134,11 @@ def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
         pl.BlockSpec((nnz_tile,), lambda j, i: (i,)),
         pl.BlockSpec((k, col_tile), lambda j, i: (0, j)),
     ]
+    quantized = scales is not None
+    if quantized:
+        assert scales.shape == (n_rows,), (scales.shape, n_rows)
+        operands.append(scales)
+        in_specs.append(pl.BlockSpec((n_rows,), lambda j, i: (0,)))
     if epilogue.bias:
         assert bias is not None and bias.shape == (1, n), (n, bias)
         operands.append(bias)
@@ -132,7 +158,8 @@ def spmm_eb(rows, cols, vals, b, *, n_rows: int, nnz_tile: int = 256,
 
     kernel = functools.partial(
         _spmm_eb_kernel, group_size=group_size, strategy=strategy,
-        heavy_tiles=heavy_tiles, epilogue=epilogue, narrowed=narrowed)
+        heavy_tiles=heavy_tiles, epilogue=epilogue, narrowed=narrowed,
+        quantized=quantized)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -21,13 +21,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.schedule import Epilogue
-from .common import apply_epilogue, split_epilogue_refs
+from .common import apply_epilogue, split_epilogue_refs, upcast_f32
 
 _NOOP = Epilogue()
 
 
 def _spmm_rb_kernel(cols_ref, vals_ref, b_ref, *refs,
-                    epilogue: Epilogue, narrowed: bool):
+                    epilogue: Epilogue, narrowed: bool, quantized: bool):
+    if quantized:
+        scales_ref, *refs = refs
     bias_ref, res_ref, out_ref, acc_ref = split_epilogue_refs(
         refs, epilogue, narrowed)
     # out_dtype narrowing: accumulate in the f32 scratch, cast only at
@@ -39,8 +41,13 @@ def _spmm_rb_kernel(cols_ref, vals_ref, b_ref, *refs,
         acc[...] = jnp.zeros_like(acc)
 
     cols = cols_ref[...]  # (R, Wt)
-    vals = vals_ref[...].astype(jnp.float32)  # (R, Wt)
-    b = b_ref[...].astype(jnp.float32)  # (K, C)
+    # narrow (bf16/fp8) or int8 storage upcasts here; reduction is f32
+    vals = upcast_f32(vals_ref[...])  # (R, Wt)
+    b = upcast_f32(b_ref[...])  # (K, C)
+    if quantized:
+        # per-row scales: this cell owns whole rows, so dequant is a
+        # broadcast over the width axis before the row reduction
+        vals = vals * upcast_f32(scales_ref[...])[:, None]
 
     r, wt = cols.shape
     gathered = jnp.take(b, cols.reshape(-1), axis=0).reshape(r, wt, -1)
@@ -61,13 +68,18 @@ def _spmm_rb_kernel(cols_ref, vals_ref, b_ref, *refs,
 )
 def spmm_rb(ecols, evals, b, *, row_tile: int = 8, col_tile: int = 128,
             width_tile: int | None = None, epilogue: Epilogue = _NOOP,
-            bias=None, residual=None, interpret: bool = True):
+            scales=None, bias=None, residual=None, interpret: bool = True):
     """out (R_pad, N) from ELL arrays (R_pad, W) and dense B (K, N), with
     the fused ``epilogue`` applied per output block on its last width
     step (``bias`` (1, N) / ``residual`` (R_pad, N) per its flags).
 
     R_pad % row_tile == 0 and N % col_tile == 0 are the wrapper's job
     (``ops.spmm``); W is padded to width_tile here.
+
+    ``scales`` (R_pad,) f32, when given, selects the quantized value
+    path (DESIGN.md §13): ``evals`` holds int8 codes dequantized
+    ``val * scales[row]`` before the width reduction (padded rows carry
+    val 0, so their scale is irrelevant).
     """
     r_pad, w = ecols.shape
     k, n = b.shape
@@ -87,6 +99,11 @@ def spmm_rb(ecols, evals, b, *, row_tile: int = 8, col_tile: int = 128,
         pl.BlockSpec((row_tile, width_tile), lambda i, j, u: (i, u)),
         pl.BlockSpec((k, col_tile), lambda i, j, u: (0, j)),
     ]
+    quantized = scales is not None
+    if quantized:
+        assert scales.shape == (r_pad,), (scales.shape, r_pad)
+        operands.append(scales)
+        in_specs.append(pl.BlockSpec((row_tile,), lambda i, j, u: (i,)))
     if epilogue.bias:
         assert bias is not None and bias.shape == (1, n), (n, bias)
         operands.append(bias)
@@ -105,7 +122,7 @@ def spmm_rb(ecols, evals, b, *, row_tile: int = 8, col_tile: int = 128,
         scratch = [pltpu.VMEM((row_tile, col_tile), jnp.float32)]
 
     kernel = functools.partial(_spmm_rb_kernel, epilogue=epilogue,
-                               narrowed=narrowed)
+                               narrowed=narrowed, quantized=quantized)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -1,0 +1,126 @@
+"""Real-backend setup helpers (platform, XLA flags, precision defaults).
+
+Everything in this repo runs interpreted Pallas on CPU by default; this
+module is the one place that knows how to point the same code at a real
+backend.  All helpers only take effect when called *before* jax
+initializes its backends (first device query / first trace), which is
+why none of them are called at import time anywhere in the library —
+launch scripts call :func:`setup` as their first statement.
+
+``backend_info`` is safe to call any time and is what benches/CI record
+next to their numbers, so a result file says which backend (and whether
+fp8 storage was real or degraded) produced it.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+
+__all__ = [
+    "backend_info",
+    "enable_x64",
+    "pallas_interpret_default",
+    "set_host_device_count",
+    "set_platform",
+    "setup",
+]
+
+# XLA GPU flags that help bandwidth-bound sparse workloads (latency
+# hiding + async collectives); harmless elsewhere, only applied for gpu.
+_GPU_XLA_FLAGS = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true "
+    "--xla_gpu_enable_highest_priority_async_stream=true"
+)
+
+
+def _append_xla_flags(flags: str) -> None:
+    cur = os.environ.get("XLA_FLAGS", "")
+    missing = [f for f in flags.split() if f not in cur]
+    if missing:
+        os.environ["XLA_FLAGS"] = " ".join(([cur] if cur else []) + missing)
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Pin jax to ``'cpu'``/``'gpu'``/``'tpu'``; call before any jax use.
+
+    GPU additionally gets the bandwidth-oriented XLA flags (appended to
+    any existing ``XLA_FLAGS``, never clobbering e.g. a forced host
+    device count)."""
+    if platform not in ("cpu", "gpu", "tpu"):
+        raise ValueError(f"unknown platform {platform!r}")
+    import jax
+
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        _append_xla_flags(_GPU_XLA_FLAGS)
+
+
+def set_host_device_count(n: int) -> None:
+    """Force ``n`` host (CPU) devices via XLA_FLAGS — the multi-device CI
+    lane's mechanism (``launch/dryrun.py`` idiom).  Must run before the
+    first jax import in the process to take effect; appending here keeps
+    other flags intact."""
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    cur = os.environ.get("XLA_FLAGS", "")
+    kept = [f for f in cur.split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+    kept.append(f"--xla_force_host_platform_device_count={n}")
+    os.environ["XLA_FLAGS"] = " ".join(kept)
+
+
+def enable_x64(on: bool = True) -> None:
+    """Toggle 64-bit jax defaults (off everywhere in this repo: the
+    kernels' accumulation contract is f32; x64 is for oracle checks)."""
+    import jax
+
+    jax.config.update("jax_enable_x64", bool(on))
+
+
+def pallas_interpret_default() -> bool:
+    """Whether Pallas kernels should run interpreted on this backend:
+    True off-TPU (interpret mode is the only Pallas path on CPU), False
+    on real TPU hardware."""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def setup(platform: str | None = None, *, host_devices: int | None = None,
+          x64: bool = False) -> dict:
+    """One-call launch-script prologue: optionally pin the platform and
+    host device count, set precision defaults, and return
+    :func:`backend_info` for logging.  Warns (instead of failing) when
+    jax already initialized — the flags would silently not apply."""
+    import jax
+
+    if jax._src.xla_bridge._backends and (platform or host_devices):
+        warnings.warn(
+            "launch.backend.setup() called after jax backend "
+            "initialization; platform/device-count settings may not "
+            "apply", RuntimeWarning, stacklevel=2)
+    if host_devices is not None:
+        set_host_device_count(host_devices)
+    if platform is not None:
+        set_platform(platform)
+    enable_x64(x64)
+    return backend_info()
+
+
+def backend_info() -> dict:
+    """Snapshot of the realized backend: platform, device kind/count,
+    whether fp8 storage is native (vs the bf16 degradation,
+    ``core.dtypes.fp8_supported``), and the Pallas interpret default."""
+    import jax
+
+    from ..core.dtypes import fp8_supported
+
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "device_count": len(devs),
+        "fp8": fp8_supported(),
+        "interpret": pallas_interpret_default(),
+    }

@@ -21,10 +21,69 @@ HBM_BW = 819e9  # bytes/s
 ICI_BW = 50e9  # bytes/s/link
 
 _DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "c128": 16,
 }
+
+
+def dtype_itemsize(dt) -> int:
+    """Bytes per element of ``dt`` — an HLO short name ('bf16',
+    'f8e4m3fn') or anything ``np.dtype`` accepts (jax/numpy dtypes,
+    'bfloat16' via the ml_dtypes registration jax ships)."""
+    if isinstance(dt, str) and dt in _DTYPE_BYTES:
+        return _DTYPE_BYTES[dt]
+    import numpy as np
+
+    return int(np.dtype(dt).itemsize)
+
+
+def predict_spmm_arg_bytes(lanes: int, n_cols: int, n_dense_cols: int, *,
+                           value_dtype=None, scales_rows: int = 0,
+                           index_bytes: int = 4) -> int:
+    """Modeled per-call argument bytes of the EB SpMM measurement program
+    (``tune.measure.make_eb_runner``): two index streams over the
+    ``lanes`` padded/grouped nonzeros, the value stream at the *storage*
+    width of ``value_dtype`` (DESIGN.md §13, post-fp8-fallback), and the
+    dense ``(n_cols, n_dense_cols)`` operand at the *operand* width —
+    plus f32 per-row scales when the int8 quantized path adds them.
+
+    This is the number ``memory_analysis().argument_size_in_bytes``
+    reads back from the compiled runner, and the 'modeled bytes' the
+    ``beyond/lowprec_spmm`` bench reports: a bf16 schedule should show
+    ~2x fewer bytes than f32 on the same pattern.
+    """
+    from ..core.dtypes import operand_itemsize, value_itemsize
+
+    total = lanes * (2 * index_bytes + value_itemsize(value_dtype))
+    total += n_cols * n_dense_cols * operand_itemsize(value_dtype)
+    total += scales_rows * 4
+    return int(total)
+
+
+def predict_spmm_traffic_bytes(lanes: int, n_rows: int,
+                               n_dense_cols: int, *, value_dtype=None,
+                               scales_rows: int = 0,
+                               index_bytes: int = 4) -> int:
+    """Modeled HBM traffic of one EB SpMM call — the bandwidth-bound
+    roofline term the dtype axis moves (DESIGN.md §13).
+
+    Unlike :func:`predict_spmm_arg_bytes` (argument footprint) this
+    counts the *streams*: index + value lanes once, the gathered dense
+    rows once per lane (``lanes * n_dense_cols`` elements at the
+    operand width — the dominant term, and the one a narrow dtype
+    halves), and the f32 output write.  ``modeled_speedup = f32_bytes /
+    narrow_bytes`` is what a bandwidth-bound backend realizes; XLA-CPU
+    wall clock does not track it (scalar bf16 converts), which is why
+    the ``beyond/lowprec_spmm`` bench reports both."""
+    from ..core.dtypes import operand_itemsize, value_itemsize
+
+    total = lanes * (2 * index_bytes + value_itemsize(value_dtype))
+    total += lanes * n_dense_cols * operand_itemsize(value_dtype)  # gather
+    total += n_rows * n_dense_cols * 4  # f32 output
+    total += scales_rows * 4
+    return int(total)
 
 _COLL_RE = re.compile(
     r"=\s*(?P<types>\([^)]*\)|\S+)\s+"

@@ -58,14 +58,26 @@ class ServeEngine:
 
     # -- tuned sparse side-channel ----------------------------------------
 
-    def prepare_sparse(self, csr, n_dense_cols: int):
+    def prepare_sparse(self, csr, n_dense_cols: int, *,
+                       value_dtypes=None, error_budget=None):
         """Ahead-of-time tuning for a sparse operand this engine will
         serve with: measures (or replays the fingerprint cache) and
-        persists the winner, so :meth:`spmm` replays it for free."""
+        persists the winner, so :meth:`spmm` replays it for free.
+
+        ``value_dtypes`` / ``error_budget`` forward to
+        :func:`~repro.tune.tune_schedule`'s dtype axis (DESIGN.md §13):
+        pass ``value_dtypes=()`` to pin f32 storage for a
+        parity-critical serving path, or a tighter ``error_budget``
+        than the tuner's 5% default."""
         from ..tune import cache_key, tune_schedule
 
+        kw = {}
+        if value_dtypes is not None:
+            kw["value_dtypes"] = value_dtypes
+        if error_budget is not None:
+            kw["error_budget"] = error_budget
         sched = tune_schedule(csr, n_dense_cols,
-                              cache=self.tuner_cache).schedule
+                              cache=self.tuner_cache, **kw).schedule
         self._sched_memo[cache_key(csr, n_dense_cols)] = sched
         return sched
 

@@ -22,7 +22,15 @@ from .distributed import (  # noqa: F401
     shard_nnz_counts,
     spmm_shard_map,
 )
-from .formats import COO, CSR, ELL, GroupedCOO  # noqa: F401
+from .formats import (  # noqa: F401
+    COO,
+    CSR,
+    ELL,
+    GroupedCOO,
+    QuantizedCSR,
+    dequantize,
+    quantize_csr,
+)
 from .ops import sddmm, segment_reduce, sparse_attention, spmm  # noqa: F401
 from .random import (  # noqa: F401
     GRAPH_PATTERNS,

@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["COO", "CSR", "GroupedCOO", "ELL", "round_up"]
+__all__ = ["COO", "CSR", "GroupedCOO", "ELL", "QuantizedCSR",
+           "quantize_csr", "dequantize", "round_up"]
 
 
 def round_up(x: int, m: int) -> int:
@@ -297,6 +298,34 @@ class CSR:
                     jnp.asarray(pos, jnp.int32))
 
         return self._cached("ell_scatter", _build)
+
+    def astype(self, dtype) -> "CSR":
+        """This matrix with values stored in ``dtype``, memoized per
+        target (DESIGN.md §13).
+
+        Returns ``self`` when the dtype already matches.  Memoization
+        makes the cast instance *stable*, so its own conversion memos
+        (``grouped``/``ell``) warm up exactly once per (matrix, dtype) —
+        a serving loop running a ``value_dtype`` schedule pays the cast
+        and re-grouping on the first call only.
+        """
+        dt = np.dtype(dtype)
+        if dt == self.vals.dtype:
+            return self
+        return self._cached(
+            ("astype", str(dt)),
+            lambda: CSR(indptr=self.indptr, indices=self.indices,
+                        vals=self.vals.astype(dt), shape=self.shape))
+
+    def quantized(self, *, method: str = "absmax",
+                  percentile: float = 99.9) -> "QuantizedCSR":
+        """Memoized int8 quantization of this matrix — see
+        :func:`quantize_csr` (host-side pass; requires concrete
+        arrays)."""
+        return self._cached(
+            ("quantized", method, percentile),
+            lambda: quantize_csr(self, method=method,
+                                 percentile=percentile))
 
     def todense(self) -> jax.Array:
         """Dense (n_rows, n_cols) array of this matrix."""
@@ -560,7 +589,9 @@ class ELL:
         w = max(w, 1)
         n_pad = round_up(max(n_rows, 1), row_tile)
         ecols = np.zeros((n_pad, w), np.int32)
-        evals = np.zeros((n_pad, w), vals.dtype if vals.size else np.float32)
+        # always the source dtype: the empty-vals np.float32 fallback this
+        # used to carry silently widened empty bf16/int8 matrices
+        evals = np.zeros((n_pad, w), vals.dtype)
         row_ids, pos = _csr_scatter_index(indptr)
         ecols[row_ids, pos] = indices
         evals[row_ids, pos] = vals
@@ -574,3 +605,107 @@ class ELL:
         out = jnp.zeros((self.n_rows_padded, self.shape[1]), self.vals.dtype)
         out = out.at[rows, self.cols.reshape(-1)].add(self.vals.reshape(-1))
         return out[:n_rows]
+
+
+# ---------------------------------------------------------------------------
+# Int8 quantized values (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["csr", "scales"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class QuantizedCSR:
+    """Symmetric per-row int8 quantization of a CSR's values.
+
+    ``csr`` holds the original sparsity pattern with int8 codes as
+    values; ``scales`` is the (n_rows,) float32 per-row step so lane
+    ``t`` dequantizes as ``vals[t] * scales[row(t)]``.  Scales are
+    *segment-aligned*: every lane of a row shares one scale, so the
+    kernels dequantize per lane **before** the segment reduction and the
+    scatter stays monoid-correct — partial sums combine exactly as in
+    the f32 kernel, whichever reduction strategy runs.
+
+    The pattern conversions (``grouped``/``ell``/``tocoo``) live on the
+    inner ``csr`` and memoize there as usual; the int8 value stream
+    flows through them unchanged (the dtype-preserving padding rule).
+    """
+
+    csr: CSR  # int8 values, original pattern
+    scales: jax.Array  # (n_rows,) float32
+
+    @property
+    def shape(self) -> tuple:
+        """Dense (n_rows, n_cols) of the underlying matrix."""
+        return self.csr.shape
+
+    @property
+    def nnz(self) -> int:
+        """Stored-value count."""
+        return self.csr.nnz
+
+    def row_lengths(self) -> jax.Array:
+        """(n_rows,) per-row nnz counts (fingerprint input)."""
+        return self.csr.row_lengths()
+
+    def dequantize(self) -> CSR:
+        """Float32 CSR with values ``codes * scales[row]`` (the spec-
+        oracle view of this matrix; memoized on the inner CSR)."""
+        def _build():
+            rows = self.csr.tocoo().rows
+            vals = (self.csr.vals.astype(jnp.float32)
+                    * jnp.take(self.scales, rows))
+            return CSR(indptr=self.csr.indptr, indices=self.csr.indices,
+                       vals=vals, shape=self.csr.shape)
+
+        return _memoized(self, (self.csr.vals, self.scales),
+                         "dequantized", _build)
+
+    def todense(self) -> jax.Array:
+        """Dense f32 array of the dequantized matrix."""
+        return self.dequantize().todense()
+
+
+def quantize_csr(csr: CSR, *, method: str = "absmax",
+                 percentile: float = 99.9) -> QuantizedCSR:
+    """Quantize a CSR's values to int8 with per-row symmetric scales.
+
+    Calibration (host-side numpy pass; requires concrete arrays):
+
+    - ``"absmax"``    — scale each row by its exact |max| / 127: lossless
+      range, precision limited by outliers.
+    - ``"percentile"`` — clip the calibration statistic at the global
+      ``percentile``-th magnitude before the per-row absmax, so a few
+      outlier values don't inflate every scale; quantization saturates
+      the clipped outliers at ±127.
+
+    Empty rows get scale 1.0 (nothing to represent; avoids div-by-zero
+    on dequant).  Returns a :class:`QuantizedCSR`.
+    """
+    if method not in ("absmax", "percentile"):
+        raise ValueError(
+            f"unknown calibration method {method!r}; "
+            "expected 'absmax' or 'percentile'")
+    vals = _concrete_np(csr.vals, "int8 quantization").astype(np.float32)
+    indptr = _concrete_np(csr.indptr, "int8 quantization").astype(np.int64)
+    n_rows = csr.shape[0]
+    lengths = indptr[1:] - indptr[:-1]
+    row_ids = np.repeat(np.arange(n_rows), lengths)
+    absv = np.abs(vals)
+    if method == "percentile" and absv.size:
+        absv = np.minimum(absv, np.percentile(absv, percentile))
+    amax = np.zeros(n_rows, np.float32)
+    np.maximum.at(amax, row_ids, absv)
+    scales = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    codes = np.clip(np.rint(vals / scales[row_ids]), -127, 127)
+    inner = CSR(indptr=csr.indptr, indices=csr.indices,
+                vals=jnp.asarray(codes.astype(np.int8)), shape=csr.shape)
+    return QuantizedCSR(csr=inner, scales=jnp.asarray(scales))
+
+
+def dequantize(q: QuantizedCSR) -> CSR:
+    """Module-level alias of :meth:`QuantizedCSR.dequantize`."""
+    return q.dequantize()

@@ -53,7 +53,7 @@ from ..kernels.fused_attention import (
 )
 from ..kernels.fused_attention import sparse_attention_ref
 from ..kernels.segment_reduce import segment_reduce as _segment_reduce_kernel
-from .formats import CSR, ELL, GroupedCOO, round_up
+from .formats import CSR, ELL, GroupedCOO, QuantizedCSR, round_up
 from .random import matrix_stats
 
 __all__ = ["spmm", "sddmm", "segment_reduce", "sparse_attention"]
@@ -61,7 +61,11 @@ __all__ = ["spmm", "sddmm", "segment_reduce", "sparse_attention"]
 
 def _resolve_schedule(a, b, schedule, epilogue: Epilogue | None = None):
     if isinstance(schedule, str) and schedule in ("auto", "tune"):
-        if not isinstance(a, CSR):
+        if isinstance(a, QuantizedCSR):
+            # already-quantized input: the dtype axis is decided (int8);
+            # select tiling from the inner pattern's statistics
+            sched = Schedule.auto(matrix_stats(a.csr), int(b.shape[1]))
+        elif not isinstance(a, CSR):
             # no CSR to derive statistics (or a fingerprint) from
             sched = Schedule("eb")
         elif schedule == "tune":
@@ -115,12 +119,25 @@ def spmm(a, b, schedule="auto", *, bias=None, residual=None,
     impl        'pallas' (scheduled kernel) or 'ref' (pure-jnp oracle).
 
     The CSR + pallas path is differentiable in ``a.vals``, ``b``,
-    ``bias`` and ``residual``.
+    ``bias`` and ``residual``.  Narrow float ``value_dtype`` schedules
+    (DESIGN.md §13) stay differentiable in all four — the forward moves
+    the cast storage, the backward is the f32 ref path (straight-through
+    w.r.t. the cast).  The int8 quantized path (``value_dtype='int8'``
+    or a :class:`QuantizedCSR` input) is differentiable in ``b``/
+    ``bias``/``residual`` only: quantization is a host-side calibration
+    pass over concrete values, so ``a.vals`` is data there, not an
+    operand.
     """
     ep = _derive_epilogue(schedule, epilogue, bias, residual)
     sched = _resolve_schedule(a, b, schedule, epilogue=ep)
-    if impl != "ref" and isinstance(a, CSR):
-        return _spmm_csr_diff(a, b, sched, interpret, bias, residual)
+    if impl != "ref":
+        if isinstance(a, QuantizedCSR):
+            return _spmm_quant_diff(a, b, sched, interpret, bias, residual)
+        if isinstance(a, CSR):
+            if sched.value_dtype == "int8":
+                return _spmm_quant_diff(a.quantized(), b, sched,
+                                        interpret, bias, residual)
+            return _spmm_csr_diff(a, b, sched, interpret, bias, residual)
     return kops.spmm(a, b, sched, bias=bias, residual=residual,
                      impl=impl, interpret=interpret)
 
@@ -214,6 +231,54 @@ def _spmm_csr_diff(a: CSR, b, sched: Schedule, interpret: bool,
 
     _fn.defvjp(_fwd, _bwd)
     return _fn(a.vals, b, bias, residual)
+
+
+def _spmm_quant_diff(qa: QuantizedCSR, b, sched: Schedule, interpret: bool,
+                     bias=None, residual=None):
+    """Custom-VJP wrapper for the int8 quantized path: the scheduled
+    kernel moves int8 codes + per-row scales forward; the backward runs
+    the f32 ref path over the *dequantized* value stream.  Differentiable
+    in ``b``/``bias``/``residual`` — the codes are host-calibrated data
+    (see :func:`spmm`)."""
+    ep = sched.epilogue
+    n_rows, n_cols = qa.shape
+    coo = qa.csr.tocoo()  # cached on the inner CSR
+    rows, cols = coo.rows, coo.cols
+    vals_f = qa.dequantize().vals  # f32 stream for the ref backward
+
+    def run(bb, bias_x, res_x):
+        return kops.spmm(qa, bb, sched, bias=bias_x, residual=res_x,
+                         interpret=interpret)
+
+    @jax.custom_vjp
+    def _fn(bb, bias_x, res_x):
+        return run(bb, bias_x, res_x)
+
+    def _fwd(bb, bias_x, res_x):
+        return run(bb, bias_x, res_x), (bb, bias_x, res_x)
+
+    def _bwd(res, dout):
+        bb, bias_x, res_x = res
+        dout = dout.astype(jnp.float32)
+        dres = dout.astype(res_x.dtype) if ep.residual else None
+        if ep.activation is not None:
+            z = ref.spmm_coo_ref(rows, cols, vals_f, bb, n_rows)
+            if ep.bias:
+                z = z + jnp.reshape(bias_x, (1, -1)).astype(jnp.float32)
+            from ..core.schedule import ACTIVATIONS
+
+            _, act_vjp = jax.vjp(ACTIVATIONS[ep.activation], z)
+            dz, = act_vjp(dout)
+        else:
+            dz = dout
+        dbias = jnp.sum(dz, axis=0).astype(
+            bias_x.dtype) if ep.bias else None
+        db = ref.spmm_coo_ref(cols, rows, vals_f, dz,
+                              n_cols).astype(bb.dtype)
+        return db, dbias, dres
+
+    _fn.defvjp(_fwd, _bwd)
+    return _fn(b, bias, residual)
 
 
 def sddmm(rows, cols, a, b, scale=None, *, schedule=None,

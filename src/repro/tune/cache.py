@@ -68,7 +68,10 @@ __all__ = [
 # ``collective`` field (DESIGN.md §12); v2 records are dropped on load
 # so distributed workloads re-tune over the enlarged space instead of
 # replaying a record that silently pins the wire mode to None.
-SCHEMA_VERSION = 3
+# 4: Schedule gained the ``value_dtype`` axis (DESIGN.md §13); v3
+# records are dropped on load so workloads re-tune with the dtype axis
+# in the pool instead of replaying a record pinned to f32 storage.
+SCHEMA_VERSION = 4
 
 _QUANTILES = (0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)
 

@@ -109,7 +109,8 @@ def _apply_epilogue(out, epilogue, bias, res):
 def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
                    nnz_tile: int = 256, epilogue=None,
                    split_threshold: int | None = None,
-                   merge_threshold: int | None = None):
+                   merge_threshold: int | None = None,
+                   value_dtype: str | None = None):
     """Jitted pure-JAX analogue of the EB kernel schedule.
 
     With split/merge thresholds the feed is the two-level skew layout
@@ -118,17 +119,32 @@ def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
     (the 'parallel' realization's cost shape) instead of the full
     segment-group machinery — the measured program genuinely changes
     with the thresholds, which is what lets the tuner prefer them on
-    power-law inputs."""
+    power-law inputs.
+
+    ``value_dtype`` (DESIGN.md §13) narrows the *fed arrays* — narrow
+    floats cast the value stream and B; 'int8' feeds codes + per-row
+    scales with the dequant inside the measured program — so XLA
+    compiles a genuinely narrower program and the tuner's dtype axis
+    measures real traffic, not a relabeled f32 run."""
+    scales = None
+    if value_dtype == "int8":
+        q = csr.quantized()
+        scales, csr_feed = q.scales, q.csr
+    else:
+        csr_feed = csr
     tile = max(nnz_tile, group_size)
-    g = csr.grouped(tile, group_size=group_size,
-                    split_threshold=split_threshold,
-                    merge_threshold=merge_threshold)
+    g = csr_feed.grouped(tile, group_size=group_size,
+                         split_threshold=split_threshold,
+                         merge_threshold=merge_threshold)
     n_rows = csr.shape[0]
     hn = g.heavy_tiles * tile  # static heavy-region lane count
     bias, res = _epilogue_args(epilogue, n_rows, n_dense)
 
     def _run(rows, cols, vals, b):
-        partial = vals[:, None].astype(jnp.float32) * jnp.take(
+        v32 = vals.astype(jnp.float32)
+        if scales is not None:
+            v32 = v32 * jnp.take(scales, rows)
+        partial = v32[:, None] * jnp.take(
             b.astype(jnp.float32), cols, axis=0)
         if strategy == GroupReduceStrategy.ACCUMULATE.value:
             out = jax.ops.segment_sum(partial, rows, num_segments=n_rows)
@@ -153,39 +169,72 @@ def make_eb_runner(csr, n_dense, *, group_size: int, strategy: str,
         return _apply_epilogue(out, epilogue, bias, res)
 
     fn = jax.jit(_run)
-    args = (g.rows, g.cols, g.vals, _dense_b(csr, n_dense))
+    vals_feed, b_feed = _storage_feed(g.vals, _dense_b(csr, n_dense),
+                                      value_dtype)
+    args = (g.rows, g.cols, vals_feed, b_feed)
     return fn, args
 
 
+def _storage_feed(vals, b, value_dtype):
+    """Cast (vals, B) to the schedule's storage dtypes — the runner's
+    compiled program then *reads narrow*, which is the effect the dtype
+    axis is tuning.  int8 feeds are pre-quantized by the caller."""
+    if value_dtype is None:
+        return vals, b
+    from ..core.dtypes import operand_dtype, storage_dtype
+
+    if value_dtype != "int8":
+        vals = vals.astype(storage_dtype(value_dtype))
+    return vals, b.astype(operand_dtype(value_dtype))
+
+
 def make_rb_runner(csr, n_dense, *, row_tile: int = 8,
-                   width: int | None = None, epilogue=None):
+                   width: int | None = None, epilogue=None,
+                   value_dtype: str | None = None):
     """Jitted (fn, args) measuring the row-balanced (ELL) SpMM analogue
-    with the epilogue folded into the measured program."""
-    ell = csr.ell(row_tile=row_tile, width=width)
+    with the epilogue folded into the measured program (``value_dtype``
+    narrows the fed arrays as in :func:`make_eb_runner`)."""
+    scales = None
+    if value_dtype == "int8":
+        q = csr.quantized()
+        ell = q.csr.ell(row_tile=row_tile, width=width)
+        scales = jnp.pad(
+            q.scales, (0, ell.n_rows_padded - csr.shape[0]),
+            constant_values=1.0)
+    else:
+        ell = csr.ell(row_tile=row_tile, width=width)
     n_rows = csr.shape[0]
     bias, res = _epilogue_args(epilogue, n_rows, n_dense)
 
     def _run(ecols, evals, b):
-        return _apply_epilogue(ref.spmm_ell_ref(ecols, evals, b, n_rows),
+        ev = evals.astype(jnp.float32)
+        if scales is not None:
+            ev = ev * scales[:, None]
+        return _apply_epilogue(ref.spmm_ell_ref(ecols, ev, b, n_rows),
                                epilogue, bias, res)
 
     fn = jax.jit(_run)
-    args = (ell.cols, ell.vals, _dense_b(csr, n_dense))
+    vals_feed, b_feed = _storage_feed(ell.vals, _dense_b(csr, n_dense),
+                                      value_dtype)
+    args = (ell.cols, vals_feed, b_feed)
     return fn, args
 
 
 def make_runner(csr, n_dense: int, sched: Schedule):
     """Runner for an arbitrary :class:`Schedule` (dispatch on kernel);
-    the schedule's epilogue is part of the measured program."""
+    the schedule's epilogue and value dtype are part of the measured
+    program."""
     if sched.kernel == "eb":
         return make_eb_runner(csr, n_dense, group_size=sched.group_size,
                               strategy=sched.strategy,
                               nnz_tile=sched.nnz_tile,
                               epilogue=sched.epilogue,
                               split_threshold=sched.split_threshold,
-                              merge_threshold=sched.merge_threshold)
+                              merge_threshold=sched.merge_threshold,
+                              value_dtype=sched.value_dtype)
     return make_rb_runner(csr, n_dense, row_tile=sched.row_tile,
-                          epilogue=sched.epilogue)
+                          epilogue=sched.epilogue,
+                          value_dtype=sched.value_dtype)
 
 
 def measure_schedule(csr, n_dense: int, sched: Schedule, *,

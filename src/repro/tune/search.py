@@ -10,9 +10,13 @@ The paper's dgSPARSE result (1.6x–2.3x, Table 4) comes from *tuning*
 2. **measure** — time the top-k candidates plus the selector's own pick
    (``Schedule.auto`` is always in the measured pool, so the tuned
    choice can never lose to it beyond timing noise);
-3. **hillclimb** — take x2 / /2 steps on ``group_size`` and the tile
+3. **dtype axis** — re-measure the winner under each narrow value dtype
+   (``DEFAULT_VALUE_DTYPES``) whose storage-parity error fits the
+   ``error_budget`` — precision is a tuned knob, not a global switch
+   (DESIGN.md §13);
+4. **hillclimb** — take x2 / /2 steps on ``group_size`` and the tile
    fields around the measured winner until no neighbor improves;
-4. **cache** — persist the winner in the :class:`~.cache.ScheduleCache`
+5. **cache** — persist the winner in the :class:`~.cache.ScheduleCache`
    under the matrix fingerprint, so serving/training loops tune once and
    replay (a hit performs *zero* measurements).
 
@@ -34,6 +38,7 @@ from .cache import ScheduleCache, TuneRecord, cache_key, default_cache
 from .measure import measure_dist_schedule, measure_schedule, time_fn
 
 __all__ = [
+    "DEFAULT_VALUE_DTYPES",
     "TuneResult",
     "cached_or_auto",
     "schedule_key",
@@ -41,6 +46,13 @@ __all__ = [
     "tune_schedule",
     "tune_segment_reduce",
 ]
+
+#: Dtype-axis candidates measured by default (DESIGN.md §13).  fp8 is
+#: deliberately absent: on backends without native fp8 it silently
+#: degrades to bf16 (``core.dtypes.storage_dtype``), so tuning would
+#: just measure bf16 twice; pass ``value_dtypes=("float8_e4m3fn", ...)``
+#: explicitly on hardware that has it.
+DEFAULT_VALUE_DTYPES = ("bfloat16", "float16", "int8")
 
 
 def schedule_key(s: Schedule) -> str:
@@ -50,14 +62,18 @@ def schedule_key(s: Schedule) -> str:
     measures a different program than the plain point with the same
     tiling, so they must not share a memo/cache slot.  So is the
     collective mode (DESIGN.md §12): the same local tiling under
-    all-reduce and reduce-scatter are different distributed programs."""
+    all-reduce and reduce-scatter are different distributed programs —
+    and the value dtype (DESIGN.md §13): bf16 storage moves half the
+    bytes of the f32 point with the same tiling.  ``value_dtype=None``
+    adds no suffix, so pre-dtype-axis keys are unchanged."""
     tile = s.nnz_tile if s.kernel == "eb" else s.row_tile
     ep = "" if s.epilogue.is_noop else f":ep[{s.epilogue.tag}]"
     skew = (f":s{s.split_threshold}:m{s.merge_threshold}"
             if s.is_skew else "")
     wire = "" if s.collective is None else f":w[{s.collective}]"
+    vd = "" if s.value_dtype is None else f":v[{s.value_dtype}]"
     return (f"{s.kernel}:t{tile}:c{s.col_tile}:G{s.group_size}"
-            f":{s.strategy}{skew}{wire}{ep}")
+            f":{s.strategy}{skew}{wire}{vd}{ep}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,6 +211,36 @@ class _Memo:
         return self._key_fn(s) in self.timings
 
 
+def _dtype_parity_error(csr, n_dense_cols: int, vd: str) -> float:
+    """Relative L2 error of the ``vd`` storage analogue vs the f32
+    oracle on a deterministic dense B (the same ``_dense_b`` the
+    runners feed).
+
+    Measures storage-precision loss only — the analogue accumulates in
+    f32 like the kernels (``upcast_f32`` contract), so the number is a
+    property of (matrix, dtype), independent of tiling/strategy, and is
+    computed once per dtype per tuning run.  int8 goes through the real
+    quantize/dequantize path (per-row symmetric scales)."""
+    import jax.numpy as jnp
+
+    from ..core.dtypes import operand_dtype, storage_dtype
+    from ..kernels import ref
+    from .measure import _dense_b
+
+    coo = csr.tocoo()
+    b = _dense_b(csr, n_dense_cols)
+    out32 = ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, b, csr.shape[0])
+    if vd == "int8":
+        vals = csr.quantized().dequantize().tocoo().vals
+    else:
+        vals = coo.vals.astype(storage_dtype(vd))
+    out = ref.spmm_coo_ref(coo.rows, coo.cols, vals,
+                           b.astype(operand_dtype(vd)), csr.shape[0])
+    num = float(jnp.linalg.norm((out - out32).ravel()))
+    den = float(jnp.linalg.norm(out32.ravel()))
+    return num / (den + 1e-12)
+
+
 def _persist(cache: ScheduleCache, key: str, best,
              memo: _Memo) -> TuneResult:
     """Record the winner and write the cache through (shared epilogue)."""
@@ -232,6 +278,8 @@ def tune_schedule(
     iters: Optional[int] = None,
     backend: Optional[str] = None,
     epilogue=None,
+    value_dtypes: Optional[tuple] = None,
+    error_budget: float = 0.05,
 ) -> TuneResult:
     """Empirically pick the best schedule for ``csr @ B`` (B with
     ``n_dense_cols`` columns); see the module docstring for the phases.
@@ -250,6 +298,15 @@ def tune_schedule(
                 is *part of the objective*, and folded into the cache key
                 (an epilogued workload never replays a plain record or
                 vice versa).  The returned/tuned schedule carries it.
+    value_dtypes  dtype-axis candidates (DESIGN.md §13); default
+                :data:`DEFAULT_VALUE_DTYPES`, ``()`` disables the axis.
+                Each candidate is admitted only if its storage-parity
+                error vs the f32 oracle is within ``error_budget``, then
+                measured as a variant of the pool winner (the dtype
+                rescales traffic uniformly across tilings, so crossing
+                the full grid with every dtype would waste measurements).
+    error_budget  max relative L2 parity error an admitted narrow dtype
+                may introduce (default 5%).
     """
     if cache is None:
         cache = default_cache(backend)
@@ -298,6 +355,29 @@ def tune_schedule(
 
     memo = _Memo(measure)
     best = min(pool, key=memo)
+
+    # dtype axis (DESIGN.md §13): parity-gate each candidate dtype once
+    # (the error is tiling-independent — storage precision only), then
+    # measure admitted dtypes as variants of the pool winner.  Runs
+    # before hillclimb so tile refinement happens at the chosen width.
+    if value_dtypes is None:
+        value_dtypes = DEFAULT_VALUE_DTYPES
+    variants: List[Schedule] = []
+    for vd in value_dtypes:
+        try:
+            cand = best.replace(value_dtype=vd)
+        except (TypeError, ValueError):
+            continue
+        if cand.value_dtype is None or memo.seen(cand):
+            continue  # alias of f32 (or already measured) — skip
+        try:
+            err = _dtype_parity_error(csr, n_dense_cols, cand.value_dtype)
+        except (TypeError, ValueError):
+            continue  # e.g. int8 under a traced / unquantizable input
+        if err <= error_budget:
+            variants.append(cand)
+    if variants:
+        best = min([best] + variants, key=memo)
 
     for _ in range(hill_steps):
         nbs = [s for s in _feasible(_neighbors(best), stats)

@@ -276,10 +276,10 @@ def test_v2_cache_records_dropped(tmp_path):
     cache.save()
 
     fresh = ScheduleCache(path=str(path))
-    assert fresh.get(key) is not None  # sanity: v3 file round-trips
+    assert fresh.get(key) is not None  # sanity: v4 file round-trips
 
     raw = json.loads(path.read_text())
-    assert raw["version"] == SCHEMA_VERSION == 3
+    assert raw["version"] == SCHEMA_VERSION == 4
     raw["version"] = 2
     path.write_text(json.dumps(raw))
     stale = ScheduleCache(path=str(path))

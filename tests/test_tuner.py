@@ -39,6 +39,22 @@ from repro.tune import (
 RTOL = ATOL = 2e-5
 
 
+def _assert_tuned_parity(got, want, sched):
+    """Parity check for a *real-measurement* tuned schedule.  The dtype
+    axis (DESIGN.md §13) may legitimately pick a narrow value dtype when
+    its measured time wins, so which dtype the tuner lands on is
+    machine-timing-dependent: f32 results must match the oracle tightly,
+    narrow ones within the tuner's default parity-error budget (the same
+    norm-relative metric ``_dtype_parity_error`` gates on, with slack
+    because the gate probed a different dense operand)."""
+    if sched is None or sched.value_dtype is None:
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+        return
+    rel = (np.linalg.norm(got - want)
+           / (np.linalg.norm(want) + 1e-12))
+    assert rel <= 0.10, (sched, rel)
+
+
 def _mat(seed=0, n=200, density=0.02, skew=1.5):
     return random_csr(n, n, density=density, skew=skew, seed=seed)
 
@@ -205,10 +221,11 @@ def test_spmm_schedule_tune_matches_oracle(tuner_env):
     want = np.asarray(
         ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, b, csr.shape[0]))
     got = np.asarray(spmm(csr, b, schedule="tune"))
-    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    sched = cached_or_auto(csr, 8)  # what "tune" just persisted
+    _assert_tuned_parity(got, want, sched)
     # second call replays the persisted record (same schedule, no search)
     got2 = np.asarray(spmm(csr, b, schedule="tune"))
-    np.testing.assert_allclose(got2, want, rtol=RTOL, atol=ATOL)
+    _assert_tuned_parity(got2, want, sched)
     # the record landed in the backend's namespace file, derived from
     # REPRO_TUNE_CACHE (tune.json -> tune.<namespace>.json)
     from repro.tune import default_cache_path
@@ -266,13 +283,13 @@ def test_serve_engine_spmm_consults_tuner_cache(tuner_env):
     want = np.asarray(
         ref.spmm_coo_ref(coo.rows, coo.cols, coo.vals, b, csr.shape[0]))
     got = np.asarray(eng.spmm(csr, b))  # request path: replay only
-    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    _assert_tuned_parity(got, want, sched)
     assert sched in eng._sched_memo.values()
     # an equal-fingerprint copy of the matrix replays the same schedule
     # (the memo is keyed by fingerprint, not object identity)
     copy = _mat(seed=17, n=140, density=0.03)
     got2 = np.asarray(eng.spmm(copy, b))
-    np.testing.assert_allclose(got2, want, rtol=RTOL, atol=ATOL)
+    _assert_tuned_parity(got2, want, sched)
 
 
 # ---------------------------------------------------------------------------
