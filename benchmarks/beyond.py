@@ -631,3 +631,85 @@ def skew_tuner_gap(quick=True):
     rows.append(("beyond/skew_gap", 0.0,
                  f"tuned_vs_static_geomean={geomean(wins):.3f}"))
     return rows
+
+
+def joint_dist_gap(quick=True):
+    """Joint collective × value-dtype search for distributed SpMM (ISSUE
+    10, DESIGN.md §14): one ``tune_dist_spmm`` run searches local tiling
+    × wire mode × storage width in a *single* objective.  The fixed
+    baseline is the fastest f32 point in the same run's measured pool
+    (keys without a ``:v[..]`` fragment) — what two sequential
+    single-axis searches could at best deliver for the wire mode alone —
+    so the win ratio (fixed/best) is >= 1.0 by construction: the joint
+    winner is the measured minimum of a superset."""
+    from repro.sparse.random import power_law_csr, random_csr
+    from repro.tune import ScheduleCache, tune_dist_spmm
+
+    mesh, axis_size = _dist_mesh()
+    n = 512 if quick else 2048
+    n_dense = 4
+    mats = [("uniform", random_csr(n, n, density=0.01, seed=0)),
+            ("powerlaw", power_law_csr(n, n, avg_degree=8.0, alpha=1.6,
+                                       seed=1))]
+
+    cache = ScheduleCache(path=None)  # never touch the user's cache
+    rows, wins = [], []
+    for name, csr in mats:
+        res = tune_dist_spmm(csr, n_dense, mesh=mesh, axis="shards",
+                             cache=cache, warmup=1, iters=3)
+        f32 = {k: v for k, v in res.measured.items() if ":v[" not in k}
+        t_fixed = min(f32.values())
+        wins.append(t_fixed / max(res.us_per_call, 1e-9))
+        s = res.schedule
+        rows.append((f"beyond/joint_dist/{name}", res.us_per_call,
+                     f"tuned={s.collective}/v{s.value_dtype or 'f32'},"
+                     f"axis={axis_size},f32_best_us={t_fixed:.1f},"
+                     f"n_measured={len(res.measured)},"
+                     f"tuned_vs_fixed={wins[-1]:.3f}"))
+    rows.append(("beyond/joint_dist_gap", 0.0,
+                 f"tuned_vs_fixed_geomean={geomean(wins):.3f}"))
+    return rows
+
+
+def fuse_boundary_gap(quick=True):
+    """Per-boundary fuse decisions on a 3-boundary chain (ISSUE 10,
+    DESIGN.md §14): ``tune_plan`` on a 4-node GCN chain seeds the two
+    all-or-nothing plans (greedy-fused, fully-split) and then hillclimbs
+    *individual* boundary flips — a mixed tag like ``FSS`` is reachable
+    only through the per-boundary search.  The fixed baseline is the
+    faster all-or-nothing seed from the same measured pool, so the win
+    ratio is >= 1.0 by construction."""
+    import numpy as np
+
+    from repro.core import Schedule
+    from repro.fuse import gcn_chain, split_all, tune_plan
+    from repro.fuse.planner import plan
+    from repro.sparse.random import random_csr
+    from repro.tune import ScheduleCache
+
+    rng = np.random.default_rng(0)
+    n = 64 if quick else 256
+    d = 8 if quick else 16
+    adj = random_csr(n, n, density=0.1, seed=0)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w0 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    b0 = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    sched = Schedule("eb", nnz_tile=128, group_size=8)
+    chain, params = gcn_chain(adj, (w0, w1), (b0, b1),
+                              final_activation="relu", schedule=sched)
+
+    cache = ScheduleCache(path=None)  # never touch the user's cache
+    res = tune_plan(chain, x, params, cache=cache, warmup=1, iters=3)
+    seeds = {plan(chain).decision.tag, split_all(chain).decision.tag}
+    t_fixed = min(res.measured[t] for t in seeds)
+    win = t_fixed / max(res.us_per_call, 1e-9)
+    rows = [(f"beyond/fuse_boundary/{tag}", us,
+             "seed" if tag in seeds else "flip")
+            for tag, us in sorted(res.measured.items())]
+    rows.append(("beyond/fuse_boundary_gap", 0.0,
+                 f"tuned={res.schedule.tag},fixed_us={t_fixed:.1f},"
+                 f"n_measured={len(res.measured)},"
+                 f"tuned_vs_fixed_geomean={win:.3f}"))
+    return rows

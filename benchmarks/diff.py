@@ -63,7 +63,8 @@ import sys
 DEFAULT_GROUPS = ("table5", "beyond/fused_attention_bwd",
                   "beyond/fusion_planner", "beyond/skew",
                   "beyond/lowprec", "beyond/dist_attention",
-                  "beyond/dist_moe")
+                  "beyond/dist_moe", "beyond/joint_dist",
+                  "beyond/fuse_boundary")
 DEFAULT_WINDOW = 5
 PROBE_ROW = "probe/runner_speed"
 TRAJECTORY_VERSION = 1

@@ -65,6 +65,8 @@ BENCHES = {
     "dist_attention": ("beyond", "dist_attention_gap",
                        {"ci_smoke", "dist"}),
     "dist_moe": ("beyond", "dist_moe_gap", {"ci_smoke", "dist"}),
+    "joint_dist": ("beyond", "joint_dist_gap", {"ci_smoke", "dist"}),
+    "fuse_boundary": ("beyond", "fuse_boundary_gap", {"ci_smoke"}),
 }
 
 

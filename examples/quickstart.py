@@ -200,4 +200,19 @@ res8 = tune_schedule(A, 8, cache=cache8, warmup=0, iters=1,
                      value_dtypes=("bfloat16", "int8"))
 print("tuned with dtype axis:", res8.schedule.value_dtype or "float32",
       "| fp8 native here:", fp8_supported())
+
+# 9. Joint axis search (DESIGN.md §14): every tuner is a thin wrapper
+#    over ONE driver composing Axis objects, so searches span axes
+#    jointly.  tune_dist_spmm searches local tiling x collective wire
+#    mode x value dtype in a single objective — a narrow dtype that
+#    only pays off under reduce-scatter (or vice versa) is reachable,
+#    where two sequential single-axis searches would each lock in the
+#    other knob's default.  value_dtypes=() reduces to the §12
+#    single-axis search; the winner replays measurement-free.
+res_j = tune_dist_spmm(G, 4, mesh=mesh, axis="shards",
+                       cache=ScheduleCache(path=None), warmup=0, iters=1)
+sj = res_j.schedule
+print(f"joint collective x dtype search: collective={sj.collective}",
+      f"| dtype={sj.value_dtype or 'float32'}",
+      f"| points measured={res_j.n_measurements}")
 print("done")

@@ -30,6 +30,7 @@ from .schedule import (  # noqa: F401
     available_strategies,
     get_strategy,
     register_strategy,
+    schedule_axes,
 )
 from .segment_group import (  # noqa: F401
     GroupReduceStrategy,

@@ -65,6 +65,7 @@ __all__ = [
     "call_spec_fn",
     "get_strategy",
     "register_strategy",
+    "schedule_axes",
     "strategy_name",
 ]
 
@@ -458,17 +459,32 @@ class Schedule:
     budget and cached records replay it measurement-free.
     """
 
-    kernel: str = "eb"
-    nnz_tile: int = 256
-    row_tile: int = 8
-    col_tile: int = 128
-    group_size: int = 32
-    strategy: str = "segment"
-    epilogue: Epilogue = Epilogue()
-    split_threshold: Optional[int] = None
-    merge_threshold: Optional[int] = None
-    collective: Optional[str] = None
-    value_dtype: Optional[str] = None
+    # each field names the search axis that owns it (``metadata["axis"]``
+    # matches a built-in in ``repro.tune.space``; ``schedule_axes()``
+    # exposes the map) — adding a tuned field means adding/extending an
+    # axis, not editing six tuners
+    kernel: str = dataclasses.field(
+        default="eb", metadata={"axis": "tiling"})
+    nnz_tile: int = dataclasses.field(
+        default=256, metadata={"axis": "tiling"})
+    row_tile: int = dataclasses.field(
+        default=8, metadata={"axis": "tiling"})
+    col_tile: int = dataclasses.field(
+        default=128, metadata={"axis": "tiling"})
+    group_size: int = dataclasses.field(
+        default=32, metadata={"axis": "strategy"})
+    strategy: str = dataclasses.field(
+        default="segment", metadata={"axis": "strategy"})
+    epilogue: Epilogue = dataclasses.field(
+        default=Epilogue(), metadata={"axis": "epilogue"})
+    split_threshold: Optional[int] = dataclasses.field(
+        default=None, metadata={"axis": "skew"})
+    merge_threshold: Optional[int] = dataclasses.field(
+        default=None, metadata={"axis": "skew"})
+    collective: Optional[str] = dataclasses.field(
+        default=None, metadata={"axis": "collective"})
+    value_dtype: Optional[str] = dataclasses.field(
+        default=None, metadata={"axis": "value_dtype"})
 
     def __post_init__(self):
         if self.kernel not in ("eb", "rb"):
@@ -630,6 +646,17 @@ class Schedule:
         return (f"Schedule({self.kernel}, {tile}, col_tile={self.col_tile}, "
                 f"G={self.group_size}, strategy={self.strategy}{sk}{wire}"
                 f"{vd}{ep})")
+
+
+def schedule_axes() -> dict:
+    """Search-axis name → the :class:`Schedule` fields it owns, read
+    from the field metadata declared next to each field.  This is the
+    authoritative field↔axis map the ``repro.tune.space`` built-ins (and
+    their key fragments) are checked against."""
+    out: dict = {}
+    for f in dataclasses.fields(Schedule):
+        out.setdefault(f.metadata.get("axis", "other"), []).append(f.name)
+    return {k: tuple(v) for k, v in out.items()}
 
 
 def _lcm_tile(tile: int, group: int) -> int:

@@ -8,8 +8,10 @@ one launch).
 
 ``tune_plan`` is the measured version: fuse/split is a *scheduling*
 decision, not just a legality one (a fused epilogue can lose to XLA's
-own fusion on tiny tiles), so it times the maximally-fused plan against
-the fully-split plan and persists the winning
+own fusion on tiny tiles), so it searches the per-boundary decision
+space on the shared tuner driver — seeded with the maximally-fused and
+fully-split plans, hillclimbing single-boundary flips on 3+-node
+chains — and persists the winning
 :class:`~repro.fuse.ir.FuseDecision` in the schedule cache
 (``fuse:``-prefixed keys, same fingerprint machinery as SpMM tuning) —
 a repeat call replays with zero measurements.
@@ -108,19 +110,29 @@ def plan_key(chain, x, params) -> str:
 def tune_plan(chain, x, params, *, cache=None,
               measure: Optional[Callable[[FusePlan], float]] = None,
               warmup: Optional[int] = None, iters: Optional[int] = None,
-              backend: Optional[str] = None, interpret: bool = True):
-    """Measure fused-vs-split for this chain on this workload and return
+              backend: Optional[str] = None, interpret: bool = True,
+              hill_steps: Optional[int] = None):
+    """Measure fuse decisions for this chain on this workload and return
     a :class:`~repro.tune.TuneResult` whose ``.schedule`` is the winning
     :class:`FuseDecision` (feed it back through :func:`plan`).
 
-    The candidates are the maximally-fused plan and the fully-split
-    plan (identical chains — nothing fusable — measure once).  The
-    winner persists under a ``fuse:`` key (:func:`plan_key`); a repeat
-    call replays the cache with zero measurements.  ``measure``
+    The search runs on the shared driver over the
+    :class:`~repro.tune.space.FuseBoundaryAxis`: the seeds are the
+    maximally-fused and the fully-split plans (identical chains —
+    nothing fusable — measure once), and on 3+-node chains the driver's
+    hillclimb then flips *individual* boundary bits around the measured
+    winner (``hill_steps`` defaults to boundaries − 1, so 1-boundary
+    chains keep the classic fused-vs-split duel) — fuse/split is a
+    per-boundary scheduling decision, not an all-or-nothing one.  A
+    flip is realized through :func:`plan`, so legality is never
+    overridden: an illegal fuse realizes back to a split and dedupes
+    away.  The winner persists under a ``fuse:`` key (:func:`plan_key`);
+    a repeat call replays the cache with zero measurements.  ``measure``
     overrides the objective (``FusePlan -> seconds``) for tests."""
-    from ..tune.cache import TuneRecord, default_cache
+    from ..tune.cache import default_cache
+    from ..tune.driver import _replay, drive
     from ..tune.measure import time_fn
-    from ..tune.search import TuneResult, _Memo, _replay
+    from ..tune.space import FuseBoundaryAxis, SearchContext, SearchSpace
 
     chain = tuple(chain)
     if cache is None:
@@ -138,22 +150,18 @@ def tune_plan(chain, x, params, *, cache=None,
                 lambda xx: run_plan(p, xx, params, interpret=interpret),
                 x, warmup=warmup, iters=iters)
 
-    fused = plan(chain)
-    candidates = [fused]
-    split = split_all(chain)
-    if split.decision != fused.decision:
-        candidates.append(split)
-
-    memo = _Memo(measure, key_fn=lambda p: p.decision.tag)
-    best = min(candidates, key=memo)
-    result = TuneResult(schedule=best.decision, us_per_call=memo(best),
-                        from_cache=False, key=key,
-                        measured=dict(memo.timings))
-    cache.put(key, TuneRecord(schedule=best.decision,
-                              us_per_call=result.us_per_call,
-                              measured=result.measured))
-    cache.save()
-    return result
+    if hill_steps is None:
+        hill_steps = max(0, len(chain) - 2)
+    space = SearchSpace(
+        (FuseBoundaryAxis(chain),),
+        key_fn=lambda p: p.decision.tag,
+        dedupe=lambda c, p: p.decision.tag,
+        record_of=lambda p: p.decision,
+    )
+    return drive(space, SearchContext(workload=chain), cache=cache,
+                 key=key, measure=measure,
+                 seeds=[plan(chain), split_all(chain)],
+                 hill_steps=hill_steps)
 
 
 def tuned_plan(chain, x, params, *, cache=None,
@@ -162,7 +170,7 @@ def tuned_plan(chain, x, params, *, cache=None,
     (chain, workload) if one exists, else the greedy maximally-fused
     plan.  Safe on a serving path."""
     from ..tune.cache import default_cache
-    from ..tune.search import _replay
+    from ..tune.driver import _replay
 
     if cache is None:
         cache = default_cache(backend)

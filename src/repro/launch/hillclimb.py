@@ -4,10 +4,16 @@ variants and print before/after roofline terms.
     PYTHONPATH=src python -m repro.launch.hillclimb [--cell arch:shape:tag]
     PYTHONPATH=src python -m repro.launch.hillclimb --spmm [--n-dense 4]
     PYTHONPATH=src python -m repro.launch.hillclimb --moe
+    PYTHONPATH=src python -m repro.launch.hillclimb --attention
+    PYTHONPATH=src python -m repro.launch.hillclimb --dist
 
 ``--moe`` does the same for the MoE grouped-matmul dispatch space
 (token_tile × capacity × f_tile × d_tile, keyed by the expert-segment
 histogram) — populating the per-backend cache ahead of serving.
+``--attention`` covers the fused-attention tuner (fwd and bwd records),
+and ``--dist`` the joint collective × tiling × value-dtype distributed
+SpMM search — together the four flags pre-warm every tuner surface the
+serving resolvers replay.
 
 ``--spmm`` hillclimbs *schedules* instead of cfg knobs: it runs the
 empirical autotuner (``repro.tune``) over the synthetic matrix suite,
@@ -153,6 +159,63 @@ def moe_hillclimb(quick: bool = True):
           f"({len(cache)} records in {cache.path})")
 
 
+def attention_hillclimb(quick: bool = True):
+    """Tune the fused-attention kernels (fwd and bwd) for representative
+    sparsity patterns through the persistent per-backend cache, so
+    training/serving loops replay them measurement-free."""
+    import jax
+    import numpy as np
+
+    from repro.sparse import random_csr
+    from repro.tune import default_cache, tune_sparse_attention
+
+    cache = default_cache()
+    n = 256 if quick else 1024
+    d = dv = 16 if quick else 64
+    cells = [("uniform", 0.0), ("skewed", 1.5)]
+    for name, skew in cells:
+        coo = random_csr(n, n, density=0.05, skew=skew,
+                         seed=int(skew * 10)).tocoo()
+        kq = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(kq[0], (n, d))
+        k = jax.random.normal(kq[1], (n, d))
+        v = jax.random.normal(kq[2], (n, dv))
+        for direction in ("fwd", "bwd"):
+            res = tune_sparse_attention(
+                np.asarray(coo.rows), np.asarray(coo.cols), q, k, v,
+                n_rows=n, direction=direction, cache=cache)
+            src = ("cache" if res.from_cache
+                   else f"{res.n_measurements} meas")
+            print(f"--- attn {name} {n}x{n} d={d} {direction} [{src}] ---")
+            print(f"  tuned {res.schedule}: {res.us_per_call:9.1f} us")
+    print(f"({len(cache)} records in {cache.path})")
+
+
+def dist_hillclimb(n_dense: int = 4, quick: bool = True):
+    """Joint collective × tiling × value-dtype tuning for sharded SpMM
+    on the local mesh (§14's joint axis search), populating the same
+    per-backend cache ``dist_spmm(..., schedule='tune')`` and
+    ``ServeEngine.prepare_dist`` replay from."""
+    from repro.launch.mesh import make_reduction_mesh
+    from repro.sparse import random_csr
+    from repro.tune import default_cache, tune_dist_spmm
+
+    cache = default_cache()
+    mesh = make_reduction_mesh()
+    axis_size = int(mesh.shape["shards"])
+    n = 512 if quick else 2048
+    for d in (0.002, 0.01):
+        csr = random_csr(n, n, density=d, seed=7)
+        res = tune_dist_spmm(csr, n_dense, mesh=mesh, axis="shards",
+                             cache=cache)
+        src = "cache" if res.from_cache else f"{res.n_measurements} meas"
+        print(f"--- dist {n}x{n} d={d} mesh={axis_size} [{src}] ---")
+        print(f"  tuned {res.schedule}: {res.us_per_call:9.1f} us "
+              f"(collective={res.schedule.collective}, "
+              f"value_dtype={res.schedule.value_dtype})")
+    print(f"({len(cache)} records in {cache.path})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", action="append", default=None,
@@ -163,6 +226,12 @@ def main():
     ap.add_argument("--moe", action="store_true",
                     help="tune MoE grouped-matmul dispatch schedules "
                          "(populates the same per-backend tuner cache)")
+    ap.add_argument("--attention", action="store_true",
+                    help="tune the fused attention kernels (fwd+bwd) so "
+                         "training/serving replay measurement-free")
+    ap.add_argument("--dist", action="store_true",
+                    help="joint collective × dtype tuning for sharded "
+                         "SpMM on the local mesh")
     ap.add_argument("--n-dense", type=int, default=4)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
@@ -172,6 +241,12 @@ def main():
         return
     if args.moe:
         moe_hillclimb(quick=not args.full)
+        return
+    if args.attention:
+        attention_hillclimb(quick=not args.full)
+        return
+    if args.dist:
+        dist_hillclimb(args.n_dense, quick=not args.full)
         return
 
     # roofline mode: importing .dryrun forces the 512-device host platform

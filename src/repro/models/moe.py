@@ -314,9 +314,10 @@ def moe_tune_collective(cfg, params, x2d, ctx, *, dispatch=None,
     import jax as _jax
 
     from ..tune.cache import default_cache, fingerprint_from_lengths
+    from ..tune.driver import _replay, drive
     from ..tune.measure import time_fn
     from ..tune.moe import moe_schedule_key
-    from ..tune.search import _Memo, _persist, _replay
+    from ..tune.space import CollectiveAxis, SearchContext, SearchSpace
 
     if ctx is None or ctx.mesh is None or ctx.model_axis is None:
         raise ValueError("moe_tune_collective needs a sharded ctx "
@@ -345,10 +346,10 @@ def moe_tune_collective(cfg, params, x2d, ctx, *, dispatch=None,
             return time_fn(fn, x2d, warmup=warmup, iters=iters)
 
     modes = ["nnz_ar"] + (["nnz_rs"] if t_local % m_size == 0 else [])
-    pool = [base.replace(collective=m) for m in modes]
-    memo = _Memo(measure, key_fn=moe_schedule_key)
-    best = min(pool, key=memo)
-    return _persist(cache, key, best, memo)
+    space = SearchSpace((CollectiveAxis(modes),), key_fn=moe_schedule_key)
+    ctx_s = SearchContext(axis_size=m_size, workload=lengths)
+    return drive(space, ctx_s, cache=cache, key=key, measure=measure,
+                 ranked=space.cross(ctx_s, [base]))
 
 
 def moe_dispatch_schedule(cfg, t_tokens: int, *, expert_lengths=None,

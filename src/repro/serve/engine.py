@@ -81,6 +81,28 @@ class ServeEngine:
         self._sched_memo[cache_key(csr, n_dense_cols)] = sched
         return sched
 
+    def prepare_dist(self, csr, n_dense_cols: int, *, mesh, axis: str,
+                     value_dtypes=None, interpret: bool = True):
+        """Ahead-of-time tuning for a *sharded* sparse operand: one
+        joint search over local tiling × collective mode × value dtype
+        (:func:`~repro.tune.tune_dist_spmm` on the §14 driver), persisted
+        under the mesh-extent-suffixed key so
+        ``dist_spmm(..., schedule="tune")`` replays it for free on the
+        serving path.  ``value_dtypes=()`` pins f32 storage."""
+        from ..tune import cache_key, tune_dist_spmm
+
+        kw = {}
+        if value_dtypes is not None:
+            kw["value_dtypes"] = value_dtypes
+        res = tune_dist_spmm(csr, n_dense_cols, mesh=mesh, axis=axis,
+                             cache=self.tuner_cache, interpret=interpret,
+                             **kw)
+        axis_size = int(mesh.shape[axis])
+        self._sched_memo[
+            f"dist:{cache_key(csr, n_dense_cols)}|mesh:{axis_size}"
+        ] = res.schedule
+        return res.schedule
+
     def prepare_moe(self, cfg, t_tokens: int, expert_lengths=None):
         """Ahead-of-time tuning of the MoE dispatch this engine will run:
         measures (or replays the per-backend cache) the token-tile ×

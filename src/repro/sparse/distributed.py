@@ -294,7 +294,10 @@ def dist_spmm(csr, b, *, mesh, axis: str, schedule=None,
     ``schedule`` accepts a :class:`Schedule` (its ``collective`` picks
     the partitioning, default 'nnz_rs'), or ``"tune"`` — run/replay the
     distributed tuner (:func:`repro.tune.tune_dist_spmm`, per-backend
-    cache namespace) so one call picks kernel tiling *and* wire mode.
+    cache namespace) so one call picks kernel tiling, wire mode *and*
+    value storage dtype in a single joint search.  A narrow tuned
+    ``value_dtype`` narrows the sharded value feed (and the dense
+    operand) host-side, so deployment moves the bytes the tuner timed.
     """
     if schedule == "tune":
         from ..tune import tune_dist_spmm
@@ -311,6 +314,10 @@ def dist_spmm(csr, b, *, mesh, axis: str, schedule=None,
     else:
         rows, cols, vals, _ = partition_nnz_coo(csr, axis_size,
                                                 sched.nnz_tile)
+    if sched.value_dtype is not None:
+        from ..tune.measure import _storage_feed
+
+        vals, b = _storage_feed(vals, b, sched.value_dtype)
     return spmm_shard_map(rows, cols, vals, b, n_rows=csr.shape[0],
                           mesh=mesh, axis=axis, mode=mode,
                           schedule=sched.replace(collective=mode),

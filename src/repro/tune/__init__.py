@@ -15,8 +15,16 @@ backend + device kind so fleets ship pre-tuned files per hardware
 generation.  ``tune_sparse_attention`` tunes the fused attention
 kernels, keyed per direction (fwd/bwd) and head count.  See DESIGN.md
 §6–§7, §9.
+
+Since the §14 refactor every tuner is a thin wrapper over one search
+framework: ``tune.space`` declares the axes (``Axis``/``SearchSpace``)
+and ``tune.driver.drive`` runs the one budgeted loop (replay → seed →
+cost-rank → top-k measure → gated axis variants → per-axis hillclimb →
+unified ``TuneRecord``), which is what lets searches span axes jointly
+(collective × value_dtype, per-boundary fuse bits).
 """
 from .cache import (  # noqa: F401
+    MIGRATIONS,
     SCHEMA_VERSION,
     ScheduleCache,
     TuneRecord,
@@ -27,6 +35,7 @@ from .cache import (  # noqa: F401
     fingerprint,
     fingerprint_from_lengths,
     legacy_cache_path,
+    migrate_records,
     set_default_cache,
 )
 from .attention import (  # noqa: F401
@@ -61,11 +70,31 @@ from .moe import (  # noqa: F401
     moe_schedule_key,
     tune_moe_dispatch,
 )
-from .search import (  # noqa: F401
+from .driver import (  # noqa: F401
     TuneResult,
+    drive,
+)
+from .space import (  # noqa: F401
+    Axis,
+    CapacityAxis,
+    CollectiveAxis,
+    EpilogueAxis,
+    FuseBoundaryAxis,
+    MoeTilingAxis,
+    SearchContext,
+    SearchSpace,
+    SkewAxis,
+    StrategyAxis,
+    TilingAxis,
+    ValueDtypeAxis,
+)
+from .search import (  # noqa: F401
+    DEFAULT_VALUE_DTYPES,
+    DIST_VALUE_DTYPES,
     cached_or_auto,
     schedule_key,
     tune_dist_spmm,
     tune_schedule,
     tune_segment_reduce,
 )
+from .calibrate import samples_from_results  # noqa: F401

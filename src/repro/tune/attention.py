@@ -25,8 +25,10 @@ import numpy as np
 
 from ..core import Schedule
 from .cache import ScheduleCache, default_cache, fingerprint_from_lengths
+from .driver import TuneResult, _replay, drive
 from .measure import time_fn
-from .search import TuneResult, _Memo, _persist, _replay
+from .space import (SearchContext, SearchSpace, StrategyAxis, TilingAxis,
+                    schedule_key)
 
 __all__ = [
     "attention_cache_key",
@@ -156,6 +158,8 @@ def tune_sparse_attention(
             return time_fn(bwd, qh, kh, vh, dout,
                            warmup=warmup, iters=iters)
 
-    memo = _Memo(measure)
-    best = min(_POOL, key=memo)
-    return _persist(cache, key, best, memo)
+    # exhaustive over the fixed pool: the driver measures every ranked
+    # point (top_k=None) and skips hillclimb/variant stages
+    space = SearchSpace((StrategyAxis(), TilingAxis()), key_fn=schedule_key)
+    return drive(space, SearchContext(), cache=cache, key=key,
+                 measure=measure, ranked=_POOL)

@@ -48,8 +48,10 @@ except ImportError:  # pragma: no cover - non-POSIX
     fcntl = None
 
 __all__ = [
+    "MIGRATIONS",
     "SCHEMA_VERSION",
     "TuneRecord",
+    "migrate_records",
     "ScheduleCache",
     "cache_key",
     "cache_namespace",
@@ -61,17 +63,56 @@ __all__ = [
     "set_default_cache",
 ]
 
-# 2: Schedule gained split/merge thresholds (skew-aware two-level
-# grouping, DESIGN.md §11) — pre-skew records are dropped on load (the
-# version gate below) so they re-tune against the enlarged space.
-# 3: Schedule (and MoeDispatchSchedule) gained the mesh-level
-# ``collective`` field (DESIGN.md §12); v2 records are dropped on load
-# so distributed workloads re-tune over the enlarged space instead of
-# replaying a record that silently pins the wire mode to None.
-# 4: Schedule gained the ``value_dtype`` axis (DESIGN.md §13); v3
-# records are dropped on load so workloads re-tune with the dtype axis
-# in the pool instead of replaying a record pinned to f32 storage.
+#: Current on-disk schema.  Bump it whenever the searched space or the
+#: key format changes in a way that makes old winners unsound; register
+#: a step in :data:`MIGRATIONS` saying how records of the *previous*
+#: version move forward (``{}`` = drop-and-retune).
 SCHEMA_VERSION = 4
+
+
+def _drop_v1(records: dict) -> dict:
+    """v1 → v2: Schedule gained split/merge thresholds (skew-aware
+    two-level grouping, DESIGN.md §11).  Pre-skew winners were picked
+    without the skew entry points in the pool, so they are dropped to
+    re-tune against the enlarged space."""
+    return {}
+
+
+def _drop_v2(records: dict) -> dict:
+    """v2 → v3: Schedule (and MoeDispatchSchedule) gained the mesh-level
+    ``collective`` field (DESIGN.md §12).  Dropped so distributed
+    workloads re-tune over the enlarged space instead of replaying a
+    record that silently pins the wire mode to None."""
+    return {}
+
+
+def _drop_v3(records: dict) -> dict:
+    """v3 → v4: Schedule gained the ``value_dtype`` axis (DESIGN.md
+    §13).  Dropped so workloads re-tune with the dtype axis in the pool
+    instead of replaying a record pinned to f32 storage."""
+    return {}
+
+
+#: version ``n`` → the step migrating raw JSON records from ``n`` to
+#: ``n + 1``.  ``migrate_records`` chains steps until the current
+#: version; an unregistered (unknown or future) version drops the file.
+MIGRATIONS = {1: _drop_v1, 2: _drop_v2, 3: _drop_v3}
+
+
+def migrate_records(version, records: dict) -> dict:
+    """Chain :data:`MIGRATIONS` steps from ``version`` up to
+    :data:`SCHEMA_VERSION` over raw (pre-``from_json``) record dicts.
+    Unknown, corrupt, or future versions return ``{}`` — stale-schema
+    records silently re-tune rather than crash."""
+    if not isinstance(version, int) or isinstance(version, bool):
+        return {}
+    while version != SCHEMA_VERSION:
+        step = MIGRATIONS.get(version)
+        if step is None:
+            return {}
+        records = step(records)
+        version = version + 1
+    return records
 
 _QUANTILES = (0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)
 
@@ -281,9 +322,15 @@ class ScheduleCache:
             raw = json.loads(path.read_text())
         except (OSError, json.JSONDecodeError):
             return out
+        records = raw.get("records", {})
         if raw.get("version") != SCHEMA_VERSION:
-            return out  # stale schema: drop, re-tune lazily
-        for key, rec in raw.get("records", {}).items():
+            # stale schema: run the migration chain (today every step is
+            # drop-and-retune, so this empties the file; a future
+            # rewriting step slots in via MIGRATIONS)
+            records = migrate_records(raw.get("version"), records)
+        if not isinstance(records, dict):
+            return out
+        for key, rec in records.items():
             try:
                 out[key] = TuneRecord.from_json(rec)
             except (KeyError, TypeError, ValueError):

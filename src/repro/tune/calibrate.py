@@ -33,6 +33,7 @@ __all__ = [
     "fit_weights",
     "model_regret",
     "calibrate",
+    "samples_from_results",
 ]
 
 
@@ -89,6 +90,37 @@ def collect_samples(
             samples.append(CalibrationSample(
                 group=gi, terms=cost_terms(stats, s, n_dense_cols),
                 seconds=float(measure(csr, s))))
+    return samples
+
+
+def samples_from_results(
+    entries: Sequence,
+) -> List[CalibrationSample]:
+    """Turn unified-driver tuning runs into calibration samples.
+
+    ``entries`` are ``(csr, n_dense_cols, TuneResult)`` triples as
+    returned by ``tune_schedule`` — the driver's :class:`TuneResult`
+    carries every measured point in ``.points`` (key → Schedule) next to
+    its timing in ``.measured`` (key → us/call), so a tuning sweep
+    doubles as a calibration corpus with no extra measurements.  Replayed
+    results (``from_cache=True``) contribute nothing — they carry no
+    fresh timings.  Non-Schedule points (e.g. a fuse plan's decisions)
+    are skipped: ``cost_terms`` is defined on the SpMM schedule space.
+    """
+    from ..sparse.random import matrix_stats
+
+    samples: List[CalibrationSample] = []
+    for gi, (csr, n_dense_cols, res) in enumerate(entries):
+        if res.from_cache or not res.points:
+            continue
+        stats = matrix_stats(csr)
+        for k, us in res.measured.items():
+            point = res.points.get(k)
+            if not isinstance(point, Schedule):
+                continue
+            samples.append(CalibrationSample(
+                group=gi, terms=cost_terms(stats, point, n_dense_cols),
+                seconds=us * 1e-6))
     return samples
 
 

@@ -258,7 +258,10 @@ def make_dist_runner(csr, n_dense: int, sched: Schedule, *, mesh,
     single-device analogues there is no cheaper stand-in that still
     observes the collective axis: the wire mode only exists in the
     compiled SPMD program, so the objective is the program itself.
-    Partitioning (host-side) happens here, outside the timed region."""
+    Partitioning (host-side) happens here, outside the timed region.
+    A narrow ``sched.value_dtype`` narrows the fed value/operand arrays
+    (:func:`_storage_feed`) so the joint collective × dtype search times
+    the storage width it is choosing."""
     from ..sparse.distributed import (partition_nnz_coo, partition_rows_coo,
                                       spmm_shard_map)
 
@@ -275,7 +278,9 @@ def make_dist_runner(csr, n_dense: int, sched: Schedule, *, mesh,
                               axis=axis, schedule=sched,
                               interpret=interpret)
 
-    args = (rows, cols, vals, _dense_b(csr, n_dense))
+    vals_feed, b_feed = _storage_feed(vals, _dense_b(csr, n_dense),
+                                      sched.value_dtype)
+    args = (rows, cols, vals_feed, b_feed)
     return _run, args
 
 

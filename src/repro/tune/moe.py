@@ -44,8 +44,9 @@ from .cache import (
     default_cache,
     fingerprint_from_lengths,
 )
+from .driver import TuneResult, _replay, drive
 from .measure import time_fn
-from .search import TuneResult, _Memo, _persist, _replay
+from .space import CapacityAxis, MoeTilingAxis, SearchContext, SearchSpace
 
 __all__ = [
     "CAPACITY_FACTORS",
@@ -249,23 +250,6 @@ def candidate_moe_schedules(
             for dt in _TILES]
 
 
-def _moe_neighbors(s: MoeDispatchSchedule,
-                   factors: List[float]) -> List[MoeDispatchSchedule]:
-    """×2 / ÷2 moves on the tile axes plus adjacent capacity factors."""
-    out = []
-    for name in ("token_tile", "f_tile", "d_tile"):
-        v = getattr(s, name)
-        for nv in (v * 2, v // 2):
-            if _TILES[0] <= nv <= _TILES[-1] and nv != v:
-                out.append(s.replace(**{name: nv}))
-    if s.capacity_factor in factors:
-        i = factors.index(s.capacity_factor)
-        for j in (i - 1, i + 1):
-            if 0 <= j < len(factors):
-                out.append(s.replace(capacity_factor=factors[j]))
-    return out
-
-
 # ---------------------------------------------------------------------------
 # Measurement: jitted blocked-GEMM analogue of kernels.grouped_matmul
 # ---------------------------------------------------------------------------
@@ -392,35 +376,19 @@ def tune_moe_dispatch(
         return _effective_program(expert_lengths, s, d_model, d_ff,
                                   max_tokens)
 
-    # dedupe on the *effective* program: nominal points that fit to the
-    # same (tile, cap_pad, dt, ft) compile identically, so measuring two
-    # of them would let timing noise pick a "winner"
-    seen_eff = {_eff(default)}
-    pool: List[MoeDispatchSchedule] = [default]
-    for s in ranked:
-        if len(pool) > top_k:
-            break
-        sig = _eff(s)
-        if s in pool or sig in seen_eff:
-            continue
-        seen_eff.add(sig)
-        pool.append(s)
-
-    memo = _Memo(measure, key_fn=moe_schedule_key)
-    best = min(pool, key=memo)
-
-    for _ in range(hill_steps):
-        nbs = [s for s in _moe_neighbors(best, factors)
-               if not memo.seen(s) and _eff(s) not in seen_eff]
-        if not nbs:
-            break
-        seen_eff.update(_eff(s) for s in nbs)
-        contender = min(nbs, key=memo)
-        if memo(contender) >= memo(best):
-            break
-        best = contender
-
-    return _persist(cache, key, best, memo)
+    # the dispatch space dedupes on the *effective* program: nominal
+    # points that fit to the same (tile, cap_pad, dt, ft) compile
+    # identically, so measuring two of them would let timing noise pick
+    # a "winner"
+    space = SearchSpace(
+        (MoeTilingAxis(_TILES), CapacityAxis(factors)),
+        key_fn=moe_schedule_key,
+        dedupe=lambda c, s: _eff(s),
+    )
+    return drive(space, SearchContext(workload=expert_lengths),
+                 cache=cache, key=key, measure=measure,
+                 seeds=[default], ranked=ranked, top_k=top_k,
+                 hill_steps=hill_steps)
 
 
 def moe_cached_or_default(

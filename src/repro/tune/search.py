@@ -2,7 +2,11 @@
 
 The paper's dgSPARSE result (1.6x–2.3x, Table 4) comes from *tuning*
 ``<groupSz, blockSz, tileSz, workerDim>``, not from a fixed heuristic.
-:func:`tune_schedule` makes that search a library call:
+:func:`tune_schedule` makes that search a library call.  Since the §14
+refactor the search loop itself lives in :func:`repro.tune.driver.drive`
+— this module only *declares* the SpMM / segment-reduce / distributed
+spaces (which axes, which cost model, which cache key) and hands them to
+the driver:
 
 1. **warm start** — rank :func:`~repro.core.candidate_schedules` by the
    static cost model (:func:`~repro.core.predict_cost`), prune points
@@ -25,8 +29,7 @@ calibration replays.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -34,11 +37,16 @@ from ..core import (COLLECTIVES, Schedule, candidate_schedules, predict_cost,
                     predict_dist_cost, select_schedule)
 from ..kernels.ops import schedule_fits_vmem
 from ..sparse.random import matrix_stats
-from .cache import ScheduleCache, TuneRecord, cache_key, default_cache
+from .cache import ScheduleCache, cache_key, default_cache
+from .driver import TuneResult, _replay, drive
 from .measure import measure_dist_schedule, measure_schedule, time_fn
+from .space import (CollectiveAxis, EpilogueAxis, SearchContext, SearchSpace,
+                    SkewAxis, StrategyAxis, TilingAxis, ValueDtypeAxis,
+                    schedule_key)
 
 __all__ = [
     "DEFAULT_VALUE_DTYPES",
+    "DIST_VALUE_DTYPES",
     "TuneResult",
     "cached_or_auto",
     "schedule_key",
@@ -54,130 +62,11 @@ __all__ = [
 #: explicitly on hardware that has it.
 DEFAULT_VALUE_DTYPES = ("bfloat16", "float16", "int8")
 
-
-def schedule_key(s: Schedule) -> str:
-    """Stable string identity of a schedule point (JSON-safe dict key).
-
-    Skew thresholds are part of the identity: a skew-partitioned point
-    measures a different program than the plain point with the same
-    tiling, so they must not share a memo/cache slot.  So is the
-    collective mode (DESIGN.md §12): the same local tiling under
-    all-reduce and reduce-scatter are different distributed programs —
-    and the value dtype (DESIGN.md §13): bf16 storage moves half the
-    bytes of the f32 point with the same tiling.  ``value_dtype=None``
-    adds no suffix, so pre-dtype-axis keys are unchanged."""
-    tile = s.nnz_tile if s.kernel == "eb" else s.row_tile
-    ep = "" if s.epilogue.is_noop else f":ep[{s.epilogue.tag}]"
-    skew = (f":s{s.split_threshold}:m{s.merge_threshold}"
-            if s.is_skew else "")
-    wire = "" if s.collective is None else f":w[{s.collective}]"
-    vd = "" if s.value_dtype is None else f":v[{s.value_dtype}]"
-    return (f"{s.kernel}:t{tile}:c{s.col_tile}:G{s.group_size}"
-            f":{s.strategy}{skew}{wire}{vd}{ep}")
-
-
-@dataclasses.dataclass(frozen=True)
-class TuneResult:
-    """Outcome of one tuning run (or cache replay)."""
-
-    schedule: Schedule
-    us_per_call: float
-    from_cache: bool
-    key: str
-    measured: Dict[str, float]  # schedule_key -> us/call this run
-
-    @property
-    def n_measurements(self) -> int:
-        """Timing measurements this run paid for (0 on cache replay)."""
-        return 0 if self.from_cache else len(self.measured)
-
-
-# ---------------------------------------------------------------------------
-# Candidate generation
-# ---------------------------------------------------------------------------
-
-_MIN_TILE, _MAX_NNZ_TILE = 32, 2048
-_MAX_ROW_TILE = 128
-
-
-def _neighbors(s: Schedule) -> List[Schedule]:
-    """x2 / /2 moves on the tunable axes, respecting the divisibility and
-    range invariants ``Schedule.__post_init__`` enforces.
-
-    Only axes the measurement objective can observe are searched: the
-    jitted schedule analogues (``tune.measure``) compile differently per
-    group_size / strategy / nnz_tile / row_tile, but are invariant to
-    ``col_tile`` (they run the full dense width in one program), so a
-    col_tile move would be selected by pure timing noise — col_tile
-    stays at the candidate grid's data-aware value instead."""
-    out = []
-
-    def _try(**kw):
-        try:
-            out.append(s.replace(**kw))
-        except ValueError:
-            pass
-
-    if s.kernel == "eb":
-        for g in (s.group_size * 2, s.group_size // 2):
-            if 1 <= g <= s.nnz_tile and g != s.group_size:
-                _try(group_size=g)
-        for t in (s.nnz_tile * 2, s.nnz_tile // 2):
-            if (max(_MIN_TILE, s.group_size) <= t <= _MAX_NNZ_TILE
-                    and t != s.nnz_tile):
-                _try(nnz_tile=t)
-        if s.is_skew:
-            # skew thresholds are searched like the tile axes: x2 / /2
-            # moves (invalid combinations — e.g. merge > split — are
-            # rejected by Schedule validation inside _try), plus the
-            # escape hatch back to the plain layout
-            if s.split_threshold is not None:
-                for st in (s.split_threshold * 2, s.split_threshold // 2):
-                    if st >= 1 and st != s.split_threshold:
-                        _try(split_threshold=st)
-            mt = s.merge_threshold
-            if mt is not None:
-                for m in {mt * 2, mt // 2, mt + 1 if mt == 0 else 0}:
-                    if m is not None and m >= 0 and m != mt:
-                        _try(merge_threshold=m)
-            _try(split_threshold=None, merge_threshold=None)
-    else:
-        for rt in (s.row_tile * 2, s.row_tile // 2):
-            if 1 <= rt <= _MAX_ROW_TILE and rt != s.row_tile:
-                _try(row_tile=rt)
-    return out
-
-
-def _skew_candidates(stats: dict, seeds: List[Schedule]) -> List[Schedule]:
-    """Two-level skew variants of the best eb seed for high-CV matrices.
-
-    Thresholds come from the ``row_quantiles`` in ``matrix_stats`` (the
-    same histogram the cache fingerprint hashes, so a cached decision
-    replays measurement-free): split at ~q90/q99 so only genuine hubs
-    pay the cross-group combine, merge at ~q50 so the light-row majority
-    packs densely.  Low-CV matrices get no candidates — the plain layout
-    already balances them.
-    """
-    rq = dict(stats.get("row_quantiles") or ())
-    if stats.get("row_cv", 0.0) <= 1.0 or not rq:
-        return []
-    base = next((s for s in seeds if s.kernel == "eb" and not s.is_skew),
-                None)
-    if base is None:
-        return []
-    q50, q90, q99 = rq.get(50, 0), rq.get(90, 0), rq.get(99, 0)
-    out: List[Schedule] = []
-    for split_q in (q90, q99):
-        split = max(2, base.group_size, int(split_q))
-        merge = max(0, min(int(q50), split))
-        for m in {merge, 0}:
-            try:
-                s = base.replace(split_threshold=split, merge_threshold=m)
-            except ValueError:
-                continue
-            if s not in out:
-                out.append(s)
-    return out
+#: Dtype-axis candidates for the *distributed* search.  int8 is
+#: excluded: the shard-local kernel consumes partitioned GroupedCOO
+#: shards, and the int8 path needs the per-row scales a CSR/
+#: QuantizedCSR carries (``kops.spmm`` rejects the combination).
+DIST_VALUE_DTYPES = ("bfloat16", "float16")
 
 
 def _feasible(cands: List[Schedule], stats: dict) -> List[Schedule]:
@@ -186,29 +75,6 @@ def _feasible(cands: List[Schedule], stats: dict) -> List[Schedule]:
                                   n_cols=stats["n_cols"],
                                   row_max=stats["row_max"])]
     return kept or cands  # never let pruning empty the pool
-
-
-class _Memo:
-    """Measure-at-most-once memo over schedule points (shared by all
-    tuners): ``memo(s)`` returns us/call, measuring on first sight.
-    ``key_fn`` stringifies a point (``schedule_key`` for SpMM /
-    segment-reduce, ``moe_schedule_key`` for MoE dispatch)."""
-
-    def __init__(self, measure: Callable[[object], float],
-                 key_fn: Callable[[object], str] = schedule_key):
-        self._measure = measure
-        self._key_fn = key_fn
-        self.timings: Dict[str, float] = {}
-
-    def __call__(self, s) -> float:
-        k = self._key_fn(s)
-        if k not in self.timings:
-            self.timings[k] = float(self._measure(s)) * 1e6
-        return self.timings[k]
-
-    def seen(self, s) -> bool:
-        """True when ``s`` has already been measured this run."""
-        return self._key_fn(s) in self.timings
 
 
 def _dtype_parity_error(csr, n_dense_cols: int, vd: str) -> float:
@@ -241,24 +107,13 @@ def _dtype_parity_error(csr, n_dense_cols: int, vd: str) -> float:
     return num / (den + 1e-12)
 
 
-def _persist(cache: ScheduleCache, key: str, best,
-             memo: _Memo) -> TuneResult:
-    """Record the winner and write the cache through (shared epilogue)."""
-    result = TuneResult(schedule=best, us_per_call=memo(best),
-                        from_cache=False, key=key,
-                        measured=dict(memo.timings))
-    cache.put(key, TuneRecord(schedule=best, us_per_call=result.us_per_call,
-                              measured=result.measured))
-    cache.save()
-    return result
+def _storage_parity(ctx: SearchContext, vd: str) -> float:
+    """The :class:`ValueDtypeAxis` admission gate for CSR workloads."""
+    return _dtype_parity_error(ctx.workload, ctx.n_dense_cols, vd)
 
 
-def _replay(cache: ScheduleCache, key: str) -> Optional[TuneResult]:
-    rec = cache.get(key)
-    if rec is None:
-        return None
-    return TuneResult(schedule=rec.schedule, us_per_call=rec.us_per_call,
-                      from_cache=True, key=key, measured={})
+def _vmem_filter(ctx: SearchContext, cands: List[Schedule]) -> List[Schedule]:
+    return _feasible(cands, ctx.stats)
 
 
 # ---------------------------------------------------------------------------
@@ -328,68 +183,28 @@ def tune_schedule(
     def _with_ep(s: Schedule) -> Schedule:
         return s if epilogue is None else s.replace(epilogue=epilogue)
 
-    ranked = sorted(_feasible(candidate_schedules(n_dense_cols), stats),
-                    key=lambda s: predict_cost(stats, s, n_dense_cols))
-    ranked = [_with_ep(s) for s in ranked]
-    pool: List[Schedule] = [_with_ep(select_schedule(stats, n_dense_cols))]
-    for s in ranked:
-        if len(pool) > top_k:
-            break
-        if s not in pool:
-            pool.append(s)
-    # kernel-family diversity: the cost model can rank one family's whole
-    # grid above the other's, but hillclimb only explores *within* a
-    # family — seed the pool with the best-ranked point of each kernel so
-    # the measured search can cross the eb/rb boundary.
-    for kernel in ("eb", "rb"):
-        fam = next((s for s in ranked if s.kernel == kernel), None)
-        if fam is not None and not any(s.kernel == kernel for s in pool):
-            pool.append(fam)
-    # skew entry points: on high-CV (power-law) matrices, seed the pool
-    # with two-level split/merge variants of the best-ranked eb point,
-    # thresholds placed from the row-length quantiles the fingerprint
-    # already hashes (DESIGN.md §11) — hillclimb then refines them.
-    for s in _skew_candidates(stats, pool + ranked):
-        if s not in pool:
-            pool.append(s)
-
-    memo = _Memo(measure)
-    best = min(pool, key=memo)
-
-    # dtype axis (DESIGN.md §13): parity-gate each candidate dtype once
-    # (the error is tiling-independent — storage precision only), then
-    # measure admitted dtypes as variants of the pool winner.  Runs
-    # before hillclimb so tile refinement happens at the chosen width.
     if value_dtypes is None:
         value_dtypes = DEFAULT_VALUE_DTYPES
-    variants: List[Schedule] = []
-    for vd in value_dtypes:
-        try:
-            cand = best.replace(value_dtype=vd)
-        except (TypeError, ValueError):
-            continue
-        if cand.value_dtype is None or memo.seen(cand):
-            continue  # alias of f32 (or already measured) — skip
-        try:
-            err = _dtype_parity_error(csr, n_dense_cols, cand.value_dtype)
-        except (TypeError, ValueError):
-            continue  # e.g. int8 under a traced / unquantizable input
-        if err <= error_budget:
-            variants.append(cand)
-    if variants:
-        best = min([best] + variants, key=memo)
-
-    for _ in range(hill_steps):
-        nbs = [s for s in _feasible(_neighbors(best), stats)
-               if not memo.seen(s)]
-        if not nbs:
-            break
-        contender = min(nbs, key=memo)
-        if memo(contender) >= memo(best):
-            break
-        best = contender
-
-    return _persist(cache, key, best, memo)
+    # the SpMM space: the paper's (strategy × tiling) core, the skew
+    # axis (§11) and the parity-gated dtype axis (§13); hillclimb moves
+    # are vmem-pruned like the candidate grid
+    space = SearchSpace(
+        (StrategyAxis(), TilingAxis(), SkewAxis(),
+         ValueDtypeAxis(value_dtypes, error_budget=error_budget,
+                        parity=_storage_parity),
+         EpilogueAxis()),
+        key_fn=schedule_key,
+        neighbor_filter=_vmem_filter,
+    )
+    ctx = SearchContext(stats=stats, n_dense_cols=n_dense_cols, workload=csr)
+    ranked = space.rank(ctx, _feasible(candidate_schedules(n_dense_cols),
+                                       stats),
+                        lambda s: predict_cost(stats, s, n_dense_cols))
+    ranked = [_with_ep(s) for s in ranked]
+    seeds = [_with_ep(select_schedule(stats, n_dense_cols))]
+    return drive(space, ctx, cache=cache, key=key, measure=measure,
+                 seeds=seeds, ranked=ranked, top_k=top_k,
+                 hill_steps=hill_steps)
 
 
 def cached_or_auto(csr, n_dense_cols: int, *,
@@ -433,7 +248,9 @@ def tune_segment_reduce(
     EB half of the grid (the RB kernel has no segment-reduce analogue).
     The objective times the *actual* segment-reduce kernel wrapper —
     unlike SpMM tuning there is no cheaper analogue that still observes
-    the tile axis, and the kernel is the op being tuned."""
+    the tile axis, and the kernel is the op being tuned.  The space is
+    exhaustive (every grid point measured, no hillclimb), so the driver
+    runs with ``top_k=None, hill_steps=0``."""
     from .cache import fingerprint_from_lengths
 
     seg = np.asarray(seg_ids)
@@ -465,17 +282,17 @@ def tune_segment_reduce(
 
             return time_fn(fn, seg_j, data, warmup=warmup, iters=iters)
 
-    memo = _Memo(measure)
+    space = SearchSpace((StrategyAxis(), TilingAxis()), key_fn=schedule_key)
     pool = [Schedule("eb", nnz_tile=tile, group_size=g, strategy=st)
             for tile in (128, 512)
             for g in (8, 32)
             for st in ("segment", "accumulate")]
-    best = min(pool, key=memo)
-    return _persist(cache, key, best, memo)
+    return drive(space, SearchContext(), cache=cache, key=key,
+                 measure=measure, ranked=pool)
 
 
 # ---------------------------------------------------------------------------
-# Distributed tuning: one search over (local tiling × collective mode)
+# Distributed tuning: one search over (local tiling × collective × dtype)
 # ---------------------------------------------------------------------------
 
 
@@ -503,22 +320,28 @@ def tune_dist_spmm(
     iters: Optional[int] = None,
     backend: Optional[str] = None,
     interpret: bool = True,
+    value_dtypes: Optional[tuple] = None,
+    error_budget: float = 0.05,
 ) -> TuneResult:
-    """One empirical search over (kernel tiling × collective mode) for a
-    sharded ``csr @ B`` on ``mesh`` — the tentpole of DESIGN.md §12: the
-    wire strategy is a :class:`Schedule` axis, not a separate knob, so
-    the tuner can trade local tile shape against collective bytes in a
-    single objective (``measure_dist_schedule`` times the real shard_map
-    program).
+    """One empirical search over (kernel tiling × collective mode ×
+    value dtype) for a sharded ``csr @ B`` on ``mesh`` — the tentpole of
+    DESIGN.md §12 extended by §14's joint axis search: the wire strategy
+    *and* the storage precision are :class:`Schedule` axes, not separate
+    knobs, so the tuner can trade local tile shape against collective
+    bytes against value-traffic width in a single objective
+    (``measure_dist_schedule`` times the real shard_map program).
 
     Candidates are the top-ranked *local* eb tilings (the shard-local
     kernel only takes the eb path) crossed with every feasible collective
     mode, pre-ranked by :func:`~repro.core.predict_dist_cost` — the
     per-shard cost model plus the ``WIRE_COST_WEIGHT`` wire term and the
-    ``shard_nnz`` straggler factor — then measured; a short hillclimb
-    refines the winner's local axes with the collective held fixed (a
-    collective flip re-partitions the operands, so it is a pool move,
-    not a neighbor move).  The cache key folds in the mesh extent:
+    ``shard_nnz`` straggler factor — then measured.  The parity-gated
+    narrow dtypes (:data:`DIST_VALUE_DTYPES`; ``value_dtypes=()``
+    recovers the single-axis search) are measured as variants of the
+    pool winner with its collective held, and a short hillclimb refines
+    the winner's local axes with the collective held fixed (a collective
+    flip re-partitions the operands, so it is a pool move, not a
+    neighbor move).  The cache key folds in the mesh extent:
     ``dist:<fingerprint>|mesh:<P>`` — the same matrix on a different
     mesh is a different tuning problem.
     """
@@ -539,33 +362,34 @@ def tune_dist_spmm(
                                          axis=axis, warmup=warmup,
                                          iters=iters, interpret=interpret)
 
+    if value_dtypes is None:
+        value_dtypes = DIST_VALUE_DTYPES
     modes = _feasible_collectives(stats, axis_size)
+    # the distributed space: no skew axis — ``_local_spmm`` strips skew
+    # from shard-local schedules, so a skew point would measure the same
+    # program twice
+    space = SearchSpace(
+        (StrategyAxis(), TilingAxis(), CollectiveAxis(modes),
+         ValueDtypeAxis(value_dtypes, error_budget=error_budget,
+                        parity=_storage_parity),
+         EpilogueAxis()),
+        key_fn=schedule_key,
+        neighbor_filter=lambda c, cands: [
+            s for s in _feasible(cands, c.stats)
+            if s.collective in COLLECTIVES],
+    )
+    ctx = SearchContext(stats=stats, n_dense_cols=n_dense_cols,
+                        axis_size=axis_size, workload=csr)
+
     eb = [s for s in _feasible(candidate_schedules(n_dense_cols), stats)
           if s.kernel == "eb"]
     eb.sort(key=lambda s: predict_cost(stats, s, n_dense_cols))
     auto = select_schedule(stats, n_dense_cols)
     seeds = ([auto] if auto.kernel == "eb" else []) + eb[:max(1, top_k)]
-    pool: List[Schedule] = []
-    for s in seeds:
-        for mode in modes:
-            cand = s.replace(collective=mode)
-            if cand not in pool:
-                pool.append(cand)
-    pool.sort(key=lambda s: predict_dist_cost(
-        stats, s, n_dense_cols, axis_size=axis_size,
-        shard_nnz=shard_nnz_counts(csr, axis_size, s.collective)))
-
-    memo = _Memo(measure)
-    best = min(pool, key=memo)
-
-    for _ in range(hill_steps):
-        nbs = [s for s in _feasible(_neighbors(best), stats)
-               if s.collective in COLLECTIVES and not memo.seen(s)]
-        if not nbs:
-            break
-        contender = min(nbs, key=memo)
-        if memo(contender) >= memo(best):
-            break
-        best = contender
-
-    return _persist(cache, key, best, memo)
+    pool = space.rank(ctx, space.cross(ctx, seeds),
+                      lambda s: predict_dist_cost(
+                          stats, s, n_dense_cols, axis_size=axis_size,
+                          shard_nnz=shard_nnz_counts(csr, axis_size,
+                                                     s.collective)))
+    return drive(space, ctx, cache=cache, key=key, measure=measure,
+                 ranked=pool, hill_steps=hill_steps)

@@ -90,7 +90,7 @@ def test_resolve_only_expands_tags_and_normalizes():
 
     dist, unknown = bench_run.resolve_only(["dist"])
     assert not unknown
-    assert set(dist) == {"dist_attention", "dist_moe"}
+    assert set(dist) == {"dist_attention", "dist_moe", "joint_dist"}
 
     # a bench name wins over tag lookup, and hyphens normalize
     names, unknown = bench_run.resolve_only(["dist-attention", "table1"])
@@ -104,7 +104,7 @@ def test_dist_benches_are_dual_lane():
     """The dist benches run in BOTH lanes: degenerate 1-device rows in
     the smoke lane, real 8-way rows in the dist lane (separate
     trajectories never cross-compare)."""
-    for name in ("dist_attention", "dist_moe"):
+    for name in ("dist_attention", "dist_moe", "joint_dist"):
         _, _, tags = bench_run.BENCHES[name]
         assert {"ci_smoke", "dist"} <= tags
 

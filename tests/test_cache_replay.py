@@ -1,0 +1,141 @@
+"""ISSUE 10 satellite 5: cache-replay smoke across every tuner surface.
+
+Each test tunes a small *deterministic* workload against the cache file
+named by ``REPRO_TUNE_CACHE`` (a per-session tmpdir fallback keeps local
+runs hermetic) and persists the winner.  CI runs this module twice
+against ONE shared ``REPRO_TUNE_CACHE`` tmpdir; the second pass sets
+``REPRO_EXPECT_REPLAY=1``, under which every tuner call must resolve
+from the cache with **zero measurements** — the measure callback raises
+if it is ever invoked.  That pins the end-to-end invariant the whole
+tuner stack is built on: tune once, replay everywhere.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Schedule
+from repro.sparse import power_law_csr, random_csr
+from repro.tune import (
+    ScheduleCache,
+    tune_dist_spmm,
+    tune_moe_dispatch,
+    tune_schedule,
+    tune_segment_reduce,
+    tune_sparse_attention,
+)
+
+EXPECT_REPLAY = os.environ.get("REPRO_EXPECT_REPLAY") == "1"
+
+
+@pytest.fixture(scope="module")
+def cache_path(tmp_path_factory):
+    """The shared cache file: ``REPRO_TUNE_CACHE`` when the harness set
+    one (the CI double-run), else a module-scoped tmpdir (hermetic local
+    runs — first pass tunes, nothing asserts replay)."""
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    if EXPECT_REPLAY:
+        pytest.fail("REPRO_EXPECT_REPLAY=1 requires REPRO_TUNE_CACHE "
+                    "to point at the first pass's cache file")
+    return str(tmp_path_factory.mktemp("tune") / "replay_cache.json")
+
+
+def _measure(record):
+    """Deterministic objective; hard-fails if the replay pass measures."""
+
+    def m(point):
+        if EXPECT_REPLAY:
+            raise AssertionError(
+                f"replay pass ran a measurement for {point!r}")
+        record.append(point)
+        return 1e-6 * (1 + len(record) % 3)
+
+    return m
+
+
+def _finish(cache, res, calls):
+    if EXPECT_REPLAY:
+        assert res.from_cache, res.key
+        assert res.n_measurements == 0 and not calls
+    else:
+        assert res.schedule is not None
+        cache.save()
+
+
+def test_replay_tune_schedule(cache_path):
+    csr = random_csr(96, 96, density=0.08, seed=0)
+    cache = ScheduleCache(path=cache_path)
+    calls = []
+    res = tune_schedule(csr, 8, cache=cache, measure=_measure(calls),
+                        top_k=1, hill_steps=1)
+    _finish(cache, res, calls)
+
+
+def test_replay_tune_segment_reduce(cache_path):
+    rng = np.random.default_rng(1)
+    seg_ids = np.sort(rng.integers(0, 24, 600)).astype(np.int32)
+    cache = ScheduleCache(path=cache_path)
+    calls = []
+    res = tune_segment_reduce(seg_ids, 4, 24, cache=cache,
+                              measure=_measure(calls))
+    _finish(cache, res, calls)
+
+
+def test_replay_tune_dist_spmm(cache_path):
+    csr = power_law_csr(64, 48, avg_degree=5.0, alpha=1.5, seed=2)
+    mesh = jax.make_mesh((jax.device_count(),), ("shards",))
+    cache = ScheduleCache(path=cache_path)
+    calls = []
+    res = tune_dist_spmm(csr, 8, mesh=mesh, axis="shards", cache=cache,
+                         measure=_measure(calls), top_k=1, hill_steps=1)
+    _finish(cache, res, calls)
+
+
+def test_replay_tune_moe_dispatch(cache_path):
+    lengths = np.asarray([96, 32, 64, 64], np.int64)
+    cache = ScheduleCache(path=cache_path)
+    calls = []
+    res = tune_moe_dispatch(lengths, 32, 32, cache=cache,
+                            measure=_measure(calls), top_k=1,
+                            hill_steps=1)
+    _finish(cache, res, calls)
+
+
+def test_replay_tune_sparse_attention(cache_path):
+    rng = np.random.default_rng(3)
+    rows = jnp.asarray(np.sort(rng.integers(0, 24, 60)).astype(np.int32))
+    cols = jnp.asarray(rng.integers(0, 20, 60).astype(np.int32))
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (24, 8))
+    k = jax.random.normal(kk, (20, 8))
+    v = jax.random.normal(kv, (20, 6))
+    cache = ScheduleCache(path=cache_path)
+    calls = []
+    res = tune_sparse_attention(rows, cols, q, k, v, n_rows=24,
+                                cache=cache, measure=_measure(calls))
+    _finish(cache, res, calls)
+
+
+def test_replay_tune_plan(cache_path):
+    from repro.fuse import gcn_chain, tune_plan
+
+    rng = np.random.default_rng(4)
+    n, d = 32, 4
+    adj = random_csr(n, n, density=0.15, seed=4)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w0 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    b0 = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    chain, params = gcn_chain(adj, (w0, w1), (b0, None),
+                              schedule=Schedule("eb", nnz_tile=64,
+                                                group_size=8))
+    cache = ScheduleCache(path=cache_path)
+    calls = []
+    res = tune_plan(chain, x, params, cache=cache,
+                    measure=_measure(calls))
+    _finish(cache, res, calls)
